@@ -1,0 +1,41 @@
+"""Paper Fig. 13: coverage-instrumentation overhead (step time + bitmap
+bytes) — toggle coverpoints are single-bit, so overhead should be small."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_smoke_config
+from repro.data import make_batch_fn
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.train import make_train_step, init_state
+
+
+def main():
+    cfg = get_smoke_config("mixtral-8x7b")   # MoE: real router coverpoints
+    batchf = make_batch_fn(cfg, 4, 32)
+    batch = {k: jax.numpy.asarray(v) for k, v in batchf(0).items()}
+
+    def run_with(taps):
+        model = build_model(cfg, Runtime(taps=taps))
+        state = init_state(model, jax.random.key(0))
+        step = jax.jit(make_train_step(model))
+        state, m, aux = step(state, batch)          # compile
+        def go():
+            s2, m2, a2 = step(state, batch)
+            jax.block_until_ready(m2["loss"])
+        us = timeit(go, n=5)
+        bits = sum(x.size for x in jax.tree.leaves(aux)
+                   if hasattr(x, "dtype") and x.dtype == jax.numpy.bool_)
+        return us, bits
+
+    us_off, _ = run_with(frozenset())
+    us_on, bits = run_with(frozenset({"coverage", "commits", "router"}))
+    emit("fig13_coverage_off", us_off, "")
+    emit("fig13_coverage_on", us_on,
+         f"overhead={us_on/us_off-1:+.1%}|toggle_bits={bits}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Per-kernel microbenchmarks: interpret-mode wall time + allclose vs the
+pure-jnp oracle (correctness gate doubles as the perf row)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention import ops as da
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.grouped_gemm import ops as gg
+from repro.kernels.grouped_gemm.ref import grouped_gemm_ref
+from repro.kernels.ssm_scan import ops as ssm
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.rglru_scan import ops as lru
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+def _ok(a, b, tol=3e-2):
+    d = float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                              - jnp.asarray(b, jnp.float32))))
+    s = float(jnp.max(jnp.abs(jnp.asarray(b, jnp.float32)))) + 1e-9
+    return d / s < tol
+
+
+def main():
+    ks = jax.random.split(jax.random.key(0), 8)
+    B, S, H, K, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    us = timeit(lambda: jax.block_until_ready(
+        fa.flash_attention(q, k, v, block_q=64, block_k=64,
+                           interpret=True)), n=3)
+    ok = _ok(fa.flash_attention(q, k, v, block_q=64, block_k=64,
+                                interpret=True),
+             flash_attention_ref(q, k, v))
+    emit("kernel_flash_attention", us, f"allclose_vs_ref={ok}")
+
+    qd = jax.random.normal(ks[3], (2, H, hd), jnp.float32)
+    us = timeit(lambda: jax.block_until_ready(
+        da.decode_attention(qd, k[:1].repeat(2, 0), v[:1].repeat(2, 0),
+                            pos=jnp.int32(100), window=S, block_k=64,
+                            interpret=True)), n=3)
+    ok = _ok(da.decode_attention(qd, k[:1].repeat(2, 0), v[:1].repeat(2, 0),
+                                 pos=jnp.int32(100), window=S, block_k=64,
+                                 interpret=True),
+             decode_attention_ref(qd, k[:1].repeat(2, 0),
+                                  v[:1].repeat(2, 0), pos=100, window=S))
+    emit("kernel_decode_attention", us, f"allclose_vs_ref={ok}")
+
+    x = jax.random.normal(ks[4], (4, 64, 64), jnp.float32)
+    w = jax.random.normal(ks[5], (4, 64, 64), jnp.float32)
+    us = timeit(lambda: jax.block_until_ready(
+        gg.grouped_gemm(x, w, block_m=32, block_n=32, block_k=32,
+                        interpret=True)), n=3)
+    ok = _ok(gg.grouped_gemm(x, w, block_m=32, block_n=32, block_k=32,
+                             interpret=True), grouped_gemm_ref(x, w))
+    emit("kernel_grouped_gemm", us, f"allclose_vs_ref={ok}")
+
+    Bm, Sm, Din, N = 1, 64, 64, 8
+    dt = jax.nn.softplus(jax.random.normal(ks[6], (Bm, Sm, Din)))
+    A = -jnp.exp(jax.random.normal(ks[7], (Din, N)) * 0.3)
+    B_ = jax.random.normal(ks[0], (Bm, Sm, N))
+    C_ = jax.random.normal(ks[1], (Bm, Sm, N))
+    xm = jax.random.normal(ks[2], (Bm, Sm, Din))
+    us = timeit(lambda: jax.block_until_ready(
+        ssm.ssm_scan(dt, A, B_, C_, xm, block_d=32, chunk=16,
+                     interpret=True)[0]), n=3)
+    ok = _ok(ssm.ssm_scan(dt, A, B_, C_, xm, block_d=32, chunk=16,
+                          interpret=True)[0],
+             ssm_scan_ref(dt, A, B_, C_, xm)[0])
+    emit("kernel_ssm_scan", us, f"allclose_vs_ref={ok}")
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[3], (2, 64, 64)))
+    bb = jax.random.normal(ks[4], (2, 64, 64))
+    h0 = jax.random.normal(ks[5], (2, 64))
+    us = timeit(lambda: jax.block_until_ready(
+        lru.rglru_scan(a, bb, h0, block_w=32, chunk=16,
+                       interpret=True)[0]), n=3)
+    ok = _ok(lru.rglru_scan(a, bb, h0, block_w=32, chunk=16,
+                            interpret=True)[0],
+             rglru_scan_ref(a, bb, h0)[0])
+    emit("kernel_rglru_scan", us, f"allclose_vs_ref={ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Fig. 11 + Fig. 12: co-emulation slowdown vs sampling interval, and
+stall-stack invariance across intervals (time-proportionality)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_smoke_config
+from repro.core import (PShell, default_shell_config, make_ingest, drain,
+                        Profiler)
+from repro.data import make_batch_fn
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.train import make_train_step, init_state
+from repro.train.optim import OptConfig
+
+INTERVALS = (1, 2, 5, 10, 100)
+STEPS = 20
+
+
+def main():
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits",
+                                                     "coverage"})))
+    step = jax.jit(make_train_step(model))
+    batchf = make_batch_fn(cfg, 4, 32)
+    batches = [{k: jax.numpy.asarray(v) for k, v in batchf(i).items()}
+               for i in range(STEPS)]
+    state0 = init_state(model, jax.random.key(0))
+
+    stacks = {}
+    times = {}
+    for interval in INTERVALS:
+        shell_cfg = default_shell_config(cfg, sample_interval=interval)
+        shell = PShell(shell_cfg, make_ingest(cfg))
+        wrapped = shell.wrap(step)
+
+        def run():
+            state = state0
+            sh = shell.init()
+            prof = Profiler(sample_interval=interval)
+            for i, b in enumerate(batches):
+                with prof.phase("device"):
+                    state, m, sh = wrapped(state, b, sh)
+                    jax.block_until_ready(m["loss"])
+                with prof.phase("host"):
+                    if (i + 1) % interval == 0:
+                        rec, sh = drain(sh)
+            run.prof = prof
+            return prof
+
+        us = timeit(run, n=3, warmup=1)
+        times[interval] = us
+        stacks[interval] = run.prof.live_stack().fractions()
+
+    base = times[max(INTERVALS)]
+    for interval in INTERVALS:
+        emit(f"fig11_sampling_interval_{interval}",
+             times[interval] / STEPS,
+             f"slowdown={times[interval]/base:.2f}x")
+
+    # Fig 12: stall-stack variance across intervals
+    cats = sorted(stacks[1])
+    var = max(
+        max(stacks[i].get(c, 0) for i in INTERVALS)
+        - min(stacks[i].get(c, 0) for i in INTERVALS)
+        for c in cats)
+    emit("fig12_stack_max_variance", 0.0, f"max_frac_variance={var:.4f}")
+
+
+if __name__ == "__main__":
+    main()

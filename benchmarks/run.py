@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. Run:
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_kernels",       # per-kernel us/call + allclose
+    "benchmarks.bench_tco",           # Table I  — TCO model
+    "benchmarks.bench_stall_stack",   # Fig. 7   — cycle stacks
+    "benchmarks.bench_sampling",      # Fig. 11/12 — interval sweep
+    "benchmarks.bench_coverage",      # Fig. 13  — coverage overhead
+    "benchmarks.bench_panicroom",     # Table II — portability
+    "benchmarks.bench_coemu",         # §IV-A    — verify throughput
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""ZP-Farm fault-tolerance demo (paper §IV-A): a training job is killed
+mid-run (simulated preemption), a fresh process resumes from the last
+atomic checkpoint, and the deterministic data pipeline replays the stream
+so the loss trajectory continues exactly.
+
+  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import Watchdog
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.train.loop import LoopConfig, train_loop
+
+
+class Preemption(Exception):
+    pass
+
+
+def main():
+    cfg = get_smoke_config("granite-8b")
+
+    def model():
+        return build_model(cfg, Runtime(taps=frozenset({"commits"})))
+
+    with tempfile.TemporaryDirectory() as d, \
+            tempfile.TemporaryDirectory() as d_ref:
+        lc = dict(batch=2, seq=32, checkpoint_every=5, sample_interval=5,
+                  checkpoint_dir=d)
+
+        # reference: uninterrupted 15-step run (its own checkpoint dir)
+        ref = train_loop(model(), LoopConfig(
+            steps=15, **{**lc, "checkpoint_dir": d_ref}), resume=False)
+
+        # victim: same run, "preempted" after step 8 (watchdog would flag
+        # the dead worker and the scheduler restarts the job)
+        class StopAt8:
+            n = 0
+        try:
+            def bomb(step, records):
+                StopAt8.n = step
+                if step >= 8:
+                    raise Preemption()
+            train_loop(model(), LoopConfig(steps=15, **lc),
+                       on_drain=bomb, resume=False)
+        except Preemption:
+            print(f"preempted at step {StopAt8.n} "
+                  f"(last checkpoint: step 5)")
+
+        wd = Watchdog(timeout_s=0.0)
+        wd.heartbeat("victim")
+        assert wd.should_restart()        # the farm notices
+
+        # restart: fresh process restores step-5 checkpoint, replays 5..14
+        resumed = train_loop(model(), LoopConfig(steps=15, **lc),
+                             resume=True)
+        tail = ref["losses"][5:]
+        np.testing.assert_allclose(resumed["losses"], tail,
+                                   rtol=1e-5, atol=1e-5)
+        print(f"resumed {len(resumed['losses'])} steps; trajectory matches "
+              f"the uninterrupted run exactly "
+              f"(final loss {resumed['losses'][-1]:.4f} == "
+              f"{tail[-1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Scale-Down decomposition demo (paper Fig. 5): extract a single block with
+its preserved interface, replay captured in-situ traffic bit-identically,
+and compare the scanned 'Scale-Up model' against composed subsystems.
+
+  PYTHONPATH=src python examples/scale_down_extraction.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import decompose
+from repro.models import build_model
+
+
+def main():
+    for arch in ("recurrentgemma-2b", "falcon-mamba-7b", "glm4-9b"):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        x = (jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model))
+             .astype(jnp.bfloat16))
+        pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 16))
+
+        subsystems = [s for _, s, _ in
+                      decompose.iter_layer_params(params, cfg)]
+        print(f"\n{arch}: {len(subsystems)} extractable blocks "
+              f"({[m for m, _ in cfg.layer_specs]})")
+        for layer in range(min(3, cfg.num_layers)):
+            rep = decompose.verify_extraction(params, cfg, x, pos,
+                                              model.rt, layer)
+            print(f"  {rep['subsystem']:26s} bitwise={rep['bitwise_identical']}")
+        d = decompose.scanned_vs_unrolled(params, cfg, x, pos, model.rt)
+        print(f"  scan-vs-composed rel diff: {d:.2e}")
+
+
+if __name__ == "__main__":
+    main()

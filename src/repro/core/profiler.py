@@ -1,0 +1,75 @@
+"""Stall-stack profiling with tunable sampling granularity (DESIGN C5).
+
+Two modalities, mirroring the paper's coarse-regression vs fine-analysis:
+
+  live  — wall-clock attribution of the host loop: device step time, host
+          drain/post-processing time, data-pipeline wait. The sampling
+          interval is the P-Shell gating granularity; benchmarks sweep it to
+          reproduce the Fig. 11 slowdown curve.
+  model — per-layer compute/memory/collective stall stacks from the timing
+          co-emulator (core.timing) fed by compiled-HLO costs: the Fig. 7
+          per-PC (here: per-layer) attribution, time-proportional because
+          every layer of every step is accounted, not sampled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from contextlib import contextmanager
+from typing import Dict, List, Optional
+
+CATEGORIES = ("device", "host", "data")
+
+
+@dataclasses.dataclass
+class StallStack:
+    """Normalized attribution over categories (a 'cycle stack')."""
+    seconds: Dict[str, float]
+
+    def fractions(self) -> Dict[str, float]:
+        tot = sum(self.seconds.values()) or 1.0
+        return {k: v / tot for k, v in self.seconds.items()}
+
+    def dominant(self) -> str:
+        return max(self.seconds, key=self.seconds.get)
+
+
+class Profiler:
+    def __init__(self, sample_interval: int = 1):
+        self.sample_interval = sample_interval
+        self._acc = defaultdict(float)
+        self._steps = 0
+        self.samples: List[Dict[str, float]] = []
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._acc[name] += time.perf_counter() - t0
+
+    def step_done(self):
+        self._steps += 1
+        if self._steps % self.sample_interval == 0:
+            self.samples.append(dict(self._acc))
+
+    def live_stack(self) -> StallStack:
+        return StallStack(seconds=dict(self._acc))
+
+    @property
+    def steps(self) -> int:
+        return self._steps
+
+    # ------------------------------------------------------------ model ---
+    @staticmethod
+    def model_stack(layer_terms: List[Dict[str, float]]) -> StallStack:
+        """Per-layer roofline terms -> aggregate compute/memory/collective
+        stall stack (time-proportional: all layers, all steps)."""
+        acc = {"compute": 0.0, "memory": 0.0, "collective": 0.0}
+        for g in layer_terms:
+            acc["compute"] += g.get("compute_s", 0.0)
+            acc["memory"] += g.get("memory_s", 0.0)
+            acc["collective"] += g.get("collective_s", 0.0)
+        return StallStack(seconds=acc)

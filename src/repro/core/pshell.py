@@ -1,0 +1,178 @@
+"""P-Shell: the ZynqParrot host<->DUT interface, adapted to JAX (DESIGN C2).
+
+The shell carries two kinds of state through the jit-compiled step function:
+
+  CSRs      — named control/status registers. Host writes land at step
+              boundaries (clock edges); reads never block the DUT.
+  SB-FIFOs  — bounded ring buffers with the semi-blocking contract: the
+              device side NEVER blocks (a push into a full FIFO increments a
+              ``dropped`` credit counter instead — credit/valid semantics),
+              and the host drains between step groups.
+
+Clock-gating analogue: the device runs ``sample_interval`` steps between
+host drains. interval=1 == cycle-accurate co-emulation (nothing can drop if
+FIFO depth >= events/step); larger intervals trade completeness for speed —
+exactly the paper's gating-granularity knob (Fig. 11).
+
+Non-interference is structural: shell state is threaded functionally beside
+the model state and never feeds back into it; tests assert bit-identical
+model state with the shell enabled, disabled, and at different intervals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FifoSpec:
+    depth: int
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShellConfig:
+    csrs: Dict[str, jax.ShapeDtypeStruct] = dataclasses.field(
+        default_factory=dict)
+    fifos: Dict[str, FifoSpec] = dataclasses.field(default_factory=dict)
+    sample_interval: int = 1
+
+
+def shell_init(cfg: ShellConfig):
+    state = {"csr": {}, "fifo": {}}
+    for name, spec in cfg.csrs.items():
+        state["csr"][name] = jnp.zeros(spec.shape, spec.dtype)
+    for name, f in cfg.fifos.items():
+        state["fifo"][name] = {
+            "buf": jnp.zeros((f.depth,) + tuple(f.shape), f.dtype),
+            "count": jnp.zeros((), jnp.int32),
+            "dropped": jnp.zeros((), jnp.int32),
+        }
+    return state
+
+
+# ------------------------------------------------------------ device side ---
+def csr_write(state, name: str, value):
+    csr = dict(state["csr"])
+    csr[name] = jnp.asarray(value, state["csr"][name].dtype) \
+        .reshape(state["csr"][name].shape)
+    return {**state, "csr": csr}
+
+
+def csr_accum(state, name: str, value, op: str = "or"):
+    """Accumulating CSR write (toggle bitmaps OR in, counters add)."""
+    cur = state["csr"][name]
+    v = jnp.asarray(value).astype(cur.dtype).reshape(cur.shape)
+    new = jnp.bitwise_or(cur, v) if op == "or" else cur + v
+    return csr_write(state, name, new)
+
+
+def csr_read(state, name: str):
+    return state["csr"][name]
+
+
+def fifo_push(state, name: str, payload):
+    """Non-blocking single push (credit/valid: full => dropped += 1)."""
+    f = state["fifo"][name]
+    depth = f["buf"].shape[0]
+    ok = f["count"] < depth
+    idx = jnp.minimum(f["count"], depth - 1)
+    payload = jnp.asarray(payload, f["buf"].dtype) \
+        .reshape(f["buf"].shape[1:])
+    cur = jax.lax.dynamic_index_in_dim(f["buf"], idx, 0, keepdims=False)
+    buf = jax.lax.dynamic_update_index_in_dim(
+        f["buf"], jnp.where(ok, payload, cur), idx, 0)
+    new = {"buf": buf,
+           "count": f["count"] + ok.astype(jnp.int32),
+           "dropped": f["dropped"] + (~ok).astype(jnp.int32)}
+    return {**state, "fifo": {**state["fifo"], name: new}}
+
+
+def fifo_push_many(state, name: str, payloads):
+    """Vectorized push of ``payloads`` (n, *shape) — e.g. all per-layer
+    commits of one step. Entries beyond the free space are dropped and
+    counted (never blocks)."""
+    f = state["fifo"][name]
+    depth = f["buf"].shape[0]
+    n = payloads.shape[0]
+    start = f["count"]
+    slots = start + jnp.arange(n)
+    ok = slots < depth
+    # overflow entries scatter into a trash row (index `depth`) so duplicate
+    # indices never race with a valid write
+    idxs = jnp.where(ok, slots, depth)
+    payloads = payloads.astype(f["buf"].dtype)
+    padded = jnp.concatenate(
+        [f["buf"], jnp.zeros((1,) + f["buf"].shape[1:], f["buf"].dtype)])
+    buf = padded.at[idxs].set(payloads)[:depth]
+    pushed = jnp.sum(ok.astype(jnp.int32))
+    new = {"buf": buf, "count": start + pushed,
+           "dropped": f["dropped"] + (n - pushed)}
+    return {**state, "fifo": {**state["fifo"], name: new}}
+
+
+# -------------------------------------------------------------- host side ---
+def drain(state):
+    """Host-side drain: returns (records, reset_state). Must be called on
+    concrete (non-traced) state — i.e. between jit step dispatches, which is
+    exactly the clock-gated window."""
+    records = {}
+    new_fifo = {}
+    for name, f in state["fifo"].items():
+        n = int(f["count"])
+        records[name] = {
+            "data": np.asarray(f["buf"][:n]),
+            "count": n,
+            "dropped": int(f["dropped"]),
+        }
+        new_fifo[name] = {"buf": f["buf"],
+                          "count": jnp.zeros((), jnp.int32),
+                          "dropped": f["dropped"]}
+    csrs = {k: np.asarray(v) for k, v in state["csr"].items()}
+    return {"fifos": records, "csrs": csrs}, {**state, "fifo": new_fifo}
+
+
+# ------------------------------------------------------------------ shell ---
+class PShell:
+    """Wraps a step function with shell-state threading and runs the
+    host-side drain loop at the configured gating granularity."""
+
+    def __init__(self, cfg: ShellConfig,
+                 ingest: Callable[[Any, Any, Any], Any]):
+        self.cfg = cfg
+        self.ingest = ingest
+
+    def init(self):
+        return shell_init(self.cfg)
+
+    def wrap(self, step_fn):
+        """step_fn(state, batch) -> (state, metrics, aux)  ==>
+        wrapped(state, batch, shell) -> (state, metrics, shell)."""
+        ingest = self.ingest
+
+        def wrapped(state, batch, shell):
+            state, metrics, aux = step_fn(state, batch)
+            shell = ingest(shell, aux, metrics)
+            return state, metrics, shell
+
+        return wrapped
+
+    def run(self, wrapped_step, state, batches, shell=None,
+            on_drain: Optional[Callable[[int, dict], None]] = None):
+        """Host (VPS) loop: dispatch steps, drain every sample_interval.
+        ``batches`` is an iterable; returns (state, last_metrics, shell)."""
+        shell = self.init() if shell is None else shell
+        interval = max(1, self.cfg.sample_interval)
+        metrics = None
+        for i, batch in enumerate(batches):
+            state, metrics, shell = wrapped_step(state, batch, shell)
+            if (i + 1) % interval == 0:
+                records, shell = drain(shell)
+                if on_drain is not None:
+                    on_drain(i, records)
+        return state, metrics, shell

@@ -1,0 +1,47 @@
+"""Watchdogs, heartbeats, straggler detection (DESIGN C8 — ZP-Farm).
+
+The paper's boards carry hardware watchdog timers so a hung DUT can never
+take down the farm; the cluster analogue is worker heartbeats with a
+checkpoint-restart policy and straggler flagging for 1000+-node runs.
+Host-side pure Python; injected clock for deterministic tests.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional
+
+
+class Watchdog:
+    def __init__(self, timeout_s: float, clock: Callable[[], float] = None):
+        self.timeout_s = timeout_s
+        self.clock = clock or time.monotonic
+        self.last_beat: Dict[str, float] = {}
+        self.durations: Dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=64))
+
+    def heartbeat(self, worker: str = "w0"):
+        now = self.clock()
+        if worker in self.last_beat:
+            self.durations[worker].append(now - self.last_beat[worker])
+        self.last_beat[worker] = now
+
+    def dead_workers(self) -> List[str]:
+        now = self.clock()
+        return [w for w, t in self.last_beat.items()
+                if now - t > self.timeout_s]
+
+    def stragglers(self, factor: float = 2.0) -> List[str]:
+        """Workers whose median step duration exceeds factor x fleet median."""
+        meds = {}
+        for w, d in self.durations.items():
+            if d:
+                s = sorted(d)
+                meds[w] = s[len(s) // 2]
+        if len(meds) < 2:
+            return []
+        fleet = sorted(meds.values())[len(meds) // 2]
+        return [w for w, m in meds.items() if m > factor * fleet]
+
+    def should_restart(self) -> bool:
+        return bool(self.dead_workers())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, *, pos, window: int, softcap: float = 0.0):
+    """q: (B,H,hd); k/v: (B,W,K,hd); pos: scalar -> (B,H,hd)."""
+    B, H, hd = q.shape
+    W, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    slots = jnp.arange(W)
+    valid = jnp.logical_or(slots <= pos, pos + 1 >= window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w.astype(v.dtype), v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel (full softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (B,S,H,hd); k/v: (B,T,K,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,44 @@
+"""jit'd public wrappers: padded grouped GEMM + the composed MoE FFN."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_gemm.grouped_gemm import grouped_gemm_kernel
+
+
+def _pad(x, axis, mult):
+    p = (-x.shape[axis]) % mult
+    if p == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, p)
+    return jnp.pad(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "interpret"))
+def grouped_gemm(x, w, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128, interpret: bool = False):
+    """x: (E,M,K) @ w: (E,K,N) -> (E,M,N)."""
+    E, M, K = x.shape
+    N = w.shape[2]
+    bm = min(block_m, max(8, M))
+    bn = min(block_n, max(8, N))
+    bk = min(block_k, max(8, K))
+    xp = _pad(_pad(x, 1, bm), 2, bk)
+    wp = _pad(_pad(w, 1, bk), 2, bn)
+    out = grouped_gemm_kernel(xp, wp, block_m=bm, block_n=bn, block_k=bk,
+                              interpret=interpret)
+    return out[:, :M, :N]
+
+
+def moe_ffn(disp, wg, wu, wd, *, interpret: bool = False):
+    """Expert FFN on dispatched tokens: silu(x@wg)*(x@wu) @ wd."""
+    g = jax.nn.silu(grouped_gemm(disp, wg, interpret=interpret)
+                    .astype(jnp.float32))
+    u = grouped_gemm(disp, wu, interpret=interpret).astype(jnp.float32)
+    h = (g * u).astype(disp.dtype)
+    return grouped_gemm(h, wd, interpret=interpret)

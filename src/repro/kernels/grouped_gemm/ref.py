@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped GEMM."""
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(x, w):
+    """x: (E,M,K) @ w: (E,K,N) -> (E,M,N) with f32 accumulation."""
+    return jnp.einsum("emk,ekn->emn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_ffn_ref(disp, wg, wu, wd):
+    """The full expert FFN the kernel composes into: silu(x@wg)*(x@wu)@wd."""
+    import jax
+    g = jax.nn.silu(grouped_gemm_ref(disp, wg).astype(jnp.float32))
+    u = grouped_gemm_ref(disp, wu).astype(jnp.float32)
+    h = (g * u).astype(disp.dtype)
+    return grouped_gemm_ref(h, wd)

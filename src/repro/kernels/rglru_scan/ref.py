@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: sequential elementwise linear recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """a/b: (B,S,W); h0: (B,W). h_t = a_t h_{t-1} + b_t."""
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.swapaxes(a, 0, 1), jnp.swapaxes(b, 0, 1)))
+    return jnp.swapaxes(ys, 0, 1), h

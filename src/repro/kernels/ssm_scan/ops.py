@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_d", "chunk", "interpret"))
+def ssm_scan(dt, A, B_, C_, x, *, block_d: int = 512, chunk: int = 64,
+             interpret: bool = False):
+    """Selective scan. dt/x: (B,S,Din); A: (Din,N); B_/C_: (B,S,N).
+    Returns (y (B,S,Din) f32, h_last (B,Din,N) f32)."""
+    B, S, Din = dt.shape
+    bd = min(block_d, Din)
+    while Din % bd:
+        bd //= 2
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    f32 = lambda t: t.astype(jnp.float32)
+    return ssm_scan_kernel(f32(dt), f32(A), f32(B_), f32(C_), f32(x),
+                           block_d=bd, chunk=c, interpret=interpret)

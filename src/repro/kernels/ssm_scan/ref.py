@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: sequential selective scan (mamba-1, diagonal A)."""
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, A, B_, C_, x):
+    """dt/x: (B,S,Din) f32; A: (Din,N); B_/C_: (B,S,N).
+    h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ; y_t = h_t . C_t."""
+    B, S, Din = dt.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Din, N), jnp.float32)
+    xs = tuple(jnp.swapaxes(v, 0, 1) for v in (dt, B_, C_, x))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1), h

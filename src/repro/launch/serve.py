@@ -1,0 +1,71 @@
+"""Serving CLI: batched prefill + decode with P-Shell watchdog protection.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import Watchdog
+from repro.data.pipeline import make_batch_fn
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.serve import make_prefill_step, make_serve_step
+
+
+def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(seed))
+    bf = make_batch_fn(cfg, batch, prompt_len, seed)
+    b = {k: jnp.asarray(v) for k, v in bf(0).items() if k != "labels"}
+    max_len = prompt_len + (cfg.num_patches if cfg.family == "vlm" else 0) \
+        + gen + 8
+    prefill = jax.jit(make_prefill_step(model, max_len))
+    step = jax.jit(make_serve_step(model), donate_argnums=1)
+    wd = Watchdog(timeout_s=120.0)
+
+    t0 = time.perf_counter()
+    cache, logits = prefill(params, b)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    t1 = time.perf_counter()
+    out_tokens = [np.asarray(tok)]
+    for _ in range(gen - 1):
+        cache, logits = step(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(np.asarray(tok))
+        wd.heartbeat()
+    jax.block_until_ready(tok)
+    t2 = time.perf_counter()
+    toks = np.concatenate(out_tokens, axis=1)
+    return {
+        "prefill_s": t1 - t0,
+        "decode_s": t2 - t1,
+        "decode_tok_per_s": batch * (gen - 1) / max(t2 - t1, 1e-9),
+        "generated": toks[:, :8].tolist(),
+        "hung": wd.should_restart(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="glm4-9b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(json.dumps(serve(cfg, args.batch, args.prompt_len, args.gen),
+                     indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Whisper-style encoder-decoder. The conv audio frontend is a STUB per the
+assignment: inputs are precomputed frame embeddings (B, encoder_seq, d_model).
+
+Decoder blocks: causal self-attention + cross-attention over encoder output
++ MLP. Both stacks are scanned. Decode uses a self-attn ring cache plus
+per-layer precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import checksum, fold_key
+from repro.models.runtime import Runtime
+from repro.models import attention as attn
+from repro.models.layers import (
+    init_norm, norm_apply, init_mlp, mlp_apply, init_embed, embed_apply,
+    logits_apply)
+
+
+def _init_enc_block(key, cfg):
+    return {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "attn": attn.init_attention(fold_key(key, "attn"), cfg),
+        "norm2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(fold_key(key, "mlp"), cfg, cfg.d_ff),
+    }
+
+
+def _init_dec_block(key, cfg):
+    return {
+        "norm1": init_norm(cfg, cfg.d_model),
+        "self": attn.init_attention(fold_key(key, "self"), cfg),
+        "norm_x": init_norm(cfg, cfg.d_model),
+        "cross": attn.init_attention(fold_key(key, "cross"), cfg, cross=True),
+        "norm2": init_norm(cfg, cfg.d_model),
+        "mlp": init_mlp(fold_key(key, "mlp"), cfg, cfg.d_ff),
+    }
+
+
+def init_encdec(key, cfg):
+    enc_keys = jax.random.split(fold_key(key, "enc"), cfg.encoder_layers)
+    dec_keys = jax.random.split(fold_key(key, "dec"), cfg.num_layers)
+    return {
+        "embed": init_embed(fold_key(key, "embed"), cfg),
+        "enc_pos": (jax.random.normal(fold_key(key, "encpos"),
+                                      (cfg.encoder_seq, cfg.d_model),
+                                      jnp.float32) * 0.02
+                    ).astype(jnp.bfloat16 if cfg.dtype == "bfloat16"
+                             else jnp.float32),
+        "encoder": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "decoder": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(params, cfg, frames, rt: Runtime):
+    """frames: (B, T_enc, D) stubbed frontend output -> encoder hidden."""
+    x = frames + params["enc_pos"].astype(frames.dtype)
+
+    def body(x, p):
+        h = norm_apply(cfg, p["norm1"], x)
+        B, T, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x = x + attn.attention_apply(p["attn"], cfg, h, pos, causal=False,
+                                     impl="xla")
+        h2 = norm_apply(cfg, p["norm2"], x)
+        return x + mlp_apply(p["mlp"], h2), None
+
+    body = rt.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def _dec_block(p, cfg, x, positions, cross_kv, rt: Runtime):
+    h = norm_apply(cfg, p["norm1"], x)
+    x = x + attn.attention_apply(p["self"], cfg, h, positions,
+                                 impl=rt.attention_impl)
+    hx = norm_apply(cfg, p["norm_x"], x)
+    x = x + attn.cross_attention_apply(p["cross"], cfg, hx, cross_kv)
+    h2 = norm_apply(cfg, p["norm2"], x)
+    return x + mlp_apply(p["mlp"], h2)
+
+
+def decode_hidden(params, cfg, tokens, enc_out, rt: Runtime):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed_apply(params["embed"], tokens, positions)
+
+    def body(carry, p):
+        x = carry
+        ckv = attn.make_cross_kv(p["cross"], cfg, enc_out)
+        x = _dec_block(p, cfg, x, positions, ckv, rt)
+        aux = {"checksum": checksum(x)} if "commits" in rt.taps else {}
+        return x, aux
+
+    body_fn = rt.checkpoint(body)
+    x, aux = jax.lax.scan(body_fn, x, params["decoder"])
+    return norm_apply(cfg, params["final_norm"], x), {"scanned": (aux,),
+                                                      "tail": ()}
+
+
+def encdec_logits(params, cfg, batch, rt: Runtime):
+    enc_out = encode(params, cfg, batch["frames"], rt)
+    h, aux = decode_hidden(params, cfg, batch["tokens"], enc_out, rt)
+    return logits_apply(params, cfg, h), aux
+
+
+# ----------------------------------------------------------------- decode ---
+def encdec_cache_spec(cfg, batch: int, max_len: int):
+    from repro.utils import dtype_of
+    dt = dtype_of(cfg.dtype)
+    L, K, hd, T = (cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+                   cfg.encoder_seq)
+    kv = attn.cache_spec(cfg, batch, max_len, 0)
+    return {
+        "self": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), kv),
+        "cross": {
+            "ck": jax.ShapeDtypeStruct((L, batch, T, K, hd), dt),
+            "cv": jax.ShapeDtypeStruct((L, batch, T, K, hd), dt),
+        },
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def encdec_prefill(params, cfg, batch, max_len: int, rt: Runtime):
+    """Encode + run decoder over the prompt, building caches."""
+    enc_out = encode(params, cfg, batch["frames"], rt)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed_apply(params["embed"], tokens, positions)
+
+    def body(x, p):
+        ckv = attn.make_cross_kv(p["cross"], cfg, enc_out)
+        h = norm_apply(cfg, p["norm1"], x)
+        q, k, v = attn._project_qkv(p["self"], cfg, h, h, positions,
+                                    positions, rope=True)
+        if S > attn._Q_CHUNK and S % attn._Q_CHUNK == 0:
+            out = attn._chunked_causal(cfg, q, k, v, positions, 0)
+        else:
+            mask = attn._causal_window_mask(positions[0], positions[0], 0)
+            out = attn._attend(cfg, q, k, v, mask)
+        x = x + attn.dense_apply(p["self"]["o"], out)
+        hx = norm_apply(cfg, p["norm_x"], x)
+        x = x + attn.cross_attention_apply(p["cross"], cfg, hx, ckv)
+        h2 = norm_apply(cfg, p["norm2"], x)
+        x = x + mlp_apply(p["mlp"], h2)
+        pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+        return x, ({"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}, ckv)
+
+    x, (self_c, cross_c) = jax.lax.scan(body, x, params["decoder"])
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = logits_apply(params, cfg, x[:, -1:])
+    cache = {"self": self_c, "cross": cross_c,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return cache, logits
+
+
+def encdec_decode_step(params, cfg, cache, tokens1, rt: Runtime):
+    B = tokens1.shape[0]
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], tokens1,
+                    jnp.full((B, 1), pos, jnp.int32))
+
+    def body(x, inp):
+        p, self_c, cross_c = inp
+        h = norm_apply(cfg, p["norm1"], x)
+        y, self_c = attn.decode_attention_apply(p["self"], cfg, h, self_c,
+                                                pos, impl=rt.attention_impl)
+        x = x + y
+        hx = norm_apply(cfg, p["norm_x"], x)
+        x = x + attn.cross_attention_apply(p["cross"], cfg, hx, cross_c)
+        h2 = norm_apply(cfg, p["norm2"], x)
+        x = x + mlp_apply(p["mlp"], h2)
+        return x, self_c
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["decoder"], cache["self"], cache["cross"]))
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = logits_apply(params, cfg, x)
+    new_cache = {"self": new_self, "cross": cache["cross"], "pos": pos + 1}
+    return new_cache, logits

@@ -1,0 +1,129 @@
+"""Shared primitive layers: dense, norms, GLU MLP, embeddings, RoPE.
+
+Pure functional style: ``init_*`` returns a param pytree, ``*_apply`` is the
+forward. Params live in cfg dtype except norm scales (f32, standard practice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import dtype_of, fold_key
+
+
+# ----------------------------------------------------------------- dense ----
+def init_dense(key, d_in: int, d_out: int, dtype, use_bias: bool = False,
+               scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ----------------------------------------------------------------- norms ----
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def init_norm(cfg, d: int):
+    return init_layernorm(d) if cfg.use_bias else init_rmsnorm(d)
+
+
+def norm_apply(cfg, p, x):
+    if "bias" in p:
+        return layernorm_apply(p, x, cfg.norm_eps)
+    return rmsnorm_apply(p, x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- MLP ----
+def init_mlp(key, cfg, d_ff: int):
+    dt = dtype_of(cfg.dtype)
+    D = cfg.d_model
+    return {
+        "gate": init_dense(fold_key(key, "gate"), D, d_ff, dt, cfg.use_bias),
+        "up": init_dense(fold_key(key, "up"), D, d_ff, dt, cfg.use_bias),
+        "down": init_dense(fold_key(key, "down"), d_ff, D, dt, cfg.use_bias,
+                           scale=d_ff ** -0.5),
+    }
+
+
+def mlp_apply(p, x):
+    g = jax.nn.silu(dense_apply(p["gate"], x))
+    return dense_apply(p["down"], g * dense_apply(p["up"], x))
+
+
+# ------------------------------------------------------------- embedding ----
+def init_embed(key, cfg):
+    dt = dtype_of(cfg.dtype)
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                   jnp.float32) * 0.02).astype(dt)}
+    if cfg.learned_pos:
+        p["pos"] = (jax.random.normal(fold_key(key, "pos"),
+                                      (cfg.max_position, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dt)
+    return p
+
+
+def embed_apply(p, tokens, positions=None):
+    # One-hot matmul would partition most cleanly under SPMD, but XLA handles
+    # a vocab-sharded gather with the mask+all-reduce trick; keep take().
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if "pos" in p and positions is not None:
+        x = x + jnp.take(p["pos"], positions, axis=0)
+    return x
+
+
+def logits_apply(params, cfg, x):
+    emb = params["embed"]["tok"]
+    if cfg.tie_embeddings:
+        w = emb.T
+    else:
+        w = params["lm_head"]["w"]
+    return jnp.einsum("...d,dv->...v", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+# ------------------------------------------------------------------ RoPE ----
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (...,S,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,150 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin recurrent block):
+  x -> [linear -> gelu]  (gate branch)
+  x -> [linear -> causal conv1d(4) -> RG-LRU] (recurrent branch)
+  out = linear(recurrent * gate)
+
+RG-LRU recurrence (per channel, f32):
+  r_t = sigmoid(W_a x_t + b_a);  i_t = sigmoid(W_x x_t + b_x)
+  log_a_t = -c * softplus(Lambda) * r_t           (c = 8)
+  h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2 log_a_t)) * (i_t * x_t)
+
+Same chunked-scan memory discipline as ssm.py; the TPU-optimized inner loop
+is the ``repro.kernels.rglru_scan`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import dtype_of, fold_key
+from repro.models.layers import init_dense, dense_apply
+
+_C_GATE = 8.0
+_CHUNK = 256
+
+
+def init_rglru(key, cfg):
+    dt = dtype_of(cfg.dtype)
+    D, W = cfg.d_model, cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width
+    k = lambda n: fold_key(key, n)
+    # Lambda init so a^c in (0.9, 0.999):   a = sigmoid-ish via softplus param
+    u = jax.random.uniform(k("lam"), (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C_GATE))  # softplus^-1(-log u / c)
+    return {
+        "in_x": init_dense(k("inx"), D, W, dt),
+        "in_z": init_dense(k("inz"), D, W, dt),
+        "conv_w": (jax.random.normal(k("conv"), (cw, W), jnp.float32)
+                   * (cw ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((W,), dt),
+        "gate_a": init_dense(k("ga"), W, W, dt, use_bias=True),
+        "gate_x": init_dense(k("gx"), W, W, dt, use_bias=True),
+        "Lambda": lam,                                        # f32
+        "out": init_dense(k("out"), W, D, dt, scale=W ** -0.5),
+    }
+
+
+def _causal_conv(p, x):
+    W = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(W))
+    return y + p["conv_b"]
+
+
+def _gates(p, xc):
+    """xc: (B,S,W) -> log_a, b  (both (B,S,W) f32)."""
+    r = jax.nn.sigmoid(dense_apply(p["gate_a"], xc).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["gate_x"], xc).astype(jnp.float32))
+    log_a = -_C_GATE * jax.nn.softplus(p["Lambda"]) * r
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc.astype(jnp.float32))
+    return log_a, b
+
+
+def linear_scan_chunked(a, b, h0, *, chunk: int = _CHUNK):
+    """h_t = a_t * h_{t-1} + b_t, elementwise. a,b: (B,S,F) f32.
+    Outer chunk scan is rematerialized; returns (h_all (B,S,F), h_last)."""
+    B, S, F = a.shape
+    c = min(chunk, S)
+    if S % c:
+        c = S
+    n = S // c
+
+    def inner(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    def chunk_body(h, inp):
+        a_c, b_c = inp                              # (B,c,F)
+        h, ys = jax.lax.scan(inner, h,
+                             (a_c.swapaxes(0, 1), b_c.swapaxes(0, 1)))
+        return h, ys.swapaxes(0, 1)
+
+    body = jax.checkpoint(chunk_body)
+    xs = (a.reshape(B, n, c, F).swapaxes(0, 1),
+          b.reshape(B, n, c, F).swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    return ys.swapaxes(0, 1).reshape(B, S, F), h_last
+
+
+def rglru_apply(p, cfg, x, *, impl: str = "xla"):
+    """Full recurrent block, train/prefill. x: (B,S,D) -> (B,S,D)."""
+    z = jax.nn.gelu(dense_apply(p["in_z"], x))
+    xc = _causal_conv(p, dense_apply(p["in_x"], x))
+    log_a, b = _gates(p, xc)
+    B, S, W = xc.shape
+    h0 = jnp.zeros((B, W), jnp.float32)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.rglru_scan import ops as lru_ops
+        h, _ = lru_ops.rglru_scan(jnp.exp(log_a), b, h0,
+                                  interpret=(impl == "pallas_interpret"))
+    elif impl in ("cost", "mem"):
+        # roofline proxy: one elementwise pass (same flops AND same HBM
+        # traffic — the recurrence is elementwise-streaming either way)
+        h = jnp.exp(log_a) * b
+    else:
+        h, _ = linear_scan_chunked(jnp.exp(log_a), b, h0)
+    y = h.astype(x.dtype) * z
+    return dense_apply(p["out"], y)
+
+
+# ----------------------------------------------------------------- decode ---
+def rglru_state_spec(cfg, batch: int):
+    W = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, W),
+                                     dtype_of(cfg.dtype)),
+        "h": jax.ShapeDtypeStruct((batch, W), jnp.float32),
+    }
+
+
+def rglru_prefill(p, cfg, x):
+    z = jax.nn.gelu(dense_apply(p["in_z"], x))
+    x_in = dense_apply(p["in_x"], x)
+    xc = _causal_conv(p, x_in)
+    log_a, b = _gates(p, xc)
+    B, S, W = xc.shape
+    h, h_last = linear_scan_chunked(jnp.exp(log_a), b,
+                                    jnp.zeros((B, W), jnp.float32))
+    y = h.astype(x.dtype) * z
+    out = dense_apply(p["out"], y)
+    state = {"conv": x_in[:, -(cfg.conv_width - 1):, :], "h": h_last}
+    return out, state
+
+
+def rglru_decode(p, cfg, x1, state):
+    cw = cfg.conv_width
+    z = jax.nn.gelu(dense_apply(p["in_z"], x1))
+    x_in = dense_apply(p["in_x"], x1)                # (B,1,W)
+    conv_buf = jnp.concatenate([state["conv"], x_in], axis=1)
+    xc = (sum(conv_buf[:, i] * p["conv_w"][i] for i in range(cw))
+          + p["conv_b"])[:, None, :]
+    log_a, b = _gates(p, xc)
+    h = jnp.exp(log_a[:, 0]) * state["h"] + b[:, 0]
+    y = h.astype(x1.dtype)[:, None, :] * z
+    out = dense_apply(p["out"], y)
+    return out, {"conv": conv_buf[:, 1:], "h": h}

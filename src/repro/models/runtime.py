@@ -1,0 +1,71 @@
+"""Runtime (non-architectural) knobs: impl selection, mesh, remat, taps.
+
+Separated from ModelConfig so the same architecture can be lowered with
+different implementation strategies (the §Perf hillclimb iterates on these).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, FrozenSet, Tuple
+
+import jax
+
+
+_POLICIES = {
+    "none": None,
+    "dots": "dots",
+    "full": "full",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    attention_impl: str = "xla"       # xla | pallas | pallas_interpret
+    moe_impl: str = "sort"            # dense | sort (etp under pjit) | a2a
+    mesh: Any = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    remat: str = "none"               # none | full | dots
+    taps: FrozenSet[str] = frozenset()  # {"commits", "coverage", "router"}
+    aux_loss_coef: float = 0.01       # MoE load-balance loss weight
+    # Megatron-style sequence parallelism: block-boundary activations are
+    # sharded over ("model" x seq); norms/residuals run seq-sharded and the
+    # TP all-reduces become all-gather + reduce-scatter pairs (half the
+    # wire in train). §Perf change #5.
+    seq_parallel: bool = False
+    # cost_mode: lower scan-free cost proxies for the roofline composer
+    # (XLA cost_analysis counts while bodies once). Two flavors:
+    #   "flops" — exact flop count (attention unchunked: S^2 scores traced;
+    #             recurrences as one elementwise pass);
+    #   "mem"   — HBM-traffic-faithful to the production/Pallas path
+    #             (attention reads q,k,v + writes out; no S^2 residency).
+    # Never used for numerics.
+    cost_mode: str = ""               # "" | "flops" | "mem"
+
+    def constrain(self, x, *spec_tail):
+        """Pin activation sharding: batch over dp axes, rest as given.
+        Standard GSPMD hygiene — without it, FSDP weight shardings leak onto
+        activation feature dims and force giant per-layer all-reduces."""
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if spec_tail:
+            spec = P(self.data_axes, *spec_tail)
+        elif self.seq_parallel and x.ndim == 3 \
+                and x.shape[1] % self.mesh.shape[self.model_axis] == 0:
+            spec = P(self.data_axes, self.model_axis, None)
+        else:
+            spec = P(self.data_axes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def checkpoint(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "dots":
+            pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            return jax.checkpoint(fn, policy=pol)
+        return jax.checkpoint(fn)
+
+    def with_(self, **kw) -> "Runtime":
+        return dataclasses.replace(self, **kw)

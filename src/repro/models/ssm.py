@@ -1,0 +1,188 @@
+"""Mamba-1 selective-scan block (falcon-mamba-7b).
+
+Train/prefill run a chunked diagonal linear recurrence: an outer
+``lax.scan`` over chunks (rematerialized — only the (B, Din, N) carry is
+saved per chunk boundary) with a sequential inner scan. The (B, S, Din, N)
+discretized tensors are only ever materialized one chunk at a time, which is
+what makes 4k-sequence training memory-sane. The TPU-optimized version of the
+inner loop is the ``repro.kernels.ssm_scan`` Pallas kernel (VMEM-resident
+state); this file is also its numerical oracle's building block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import dtype_of, fold_key
+from repro.models.layers import init_dense, dense_apply
+
+_CHUNK = 128
+
+
+def init_mamba(key, cfg):
+    dt = dtype_of(cfg.dtype)
+    D, Din, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.dt_rank, cfg.conv_width)
+    k = lambda n: fold_key(key, n)
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1] (faithful mamba init)
+    dt_init = jnp.exp(jax.random.uniform(k("dtb"), (Din,), jnp.float32)
+                      * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": init_dense(k("in"), D, 2 * Din, dt),
+        "conv_w": (jax.random.normal(k("conv"), (W, Din), jnp.float32)
+                   * (W ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((Din,), dt),
+        "x_proj": init_dense(k("xp"), Din, R + 2 * N, dt),
+        "dt_proj": init_dense(k("dtp"), R, Din, dt, use_bias=False),
+        "dt_bias": dt_bias,                                   # f32
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (Din, N)).copy(),
+        "D_skip": jnp.ones((Din,), jnp.float32),
+        "out_proj": init_dense(k("out"), Din, D, dt, scale=Din ** -0.5),
+    }
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv, width W. x: (B, S, Din)."""
+    W = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(W))
+    return y + p["conv_b"]
+
+
+def _ssm_inputs(p, cfg, x_c):
+    """x_c: (B,S,Din) post-conv-silu -> dt (B,S,Din) f32, B_,C_ (B,S,N) f32."""
+    N, R = cfg.ssm_state, cfg.dt_rank
+    dbc = dense_apply(p["x_proj"], x_c)
+    dt_r, B_, C_ = jnp.split(dbc.astype(jnp.float32), [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, B_, C_
+
+
+def _scan_chunk(A, h0, dt, B_, C_, x_c):
+    """Sequential scan over one chunk. All f32.
+    dt/x_c: (B,C,Din); B_/C_: (B,C,N); h0: (B,Din,N). Returns y (B,C,Din), h.
+    """
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)                    # (B,Din,N)
+        dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = tuple(jnp.swapaxes(v, 0, 1) for v in (dt, B_, C_, x_c))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1), h
+
+
+def mamba_ssm(p, cfg, x_c, h0=None, *, chunk: int = _CHUNK):
+    """The selective scan y = SSM(x_c): (B,S,Din) -> (B,S,Din), h_last."""
+    B, S, Din = x_c.shape
+    N = cfg.ssm_state
+    A = -jnp.exp(p["A_log"])
+    dt, B_, C_ = _ssm_inputs(p, cfg, x_c)
+    xf = x_c.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+
+    c = min(chunk, S)
+    if S % c:
+        c = S  # irregular small seqs: single chunk
+    n = S // c
+
+    def chunk_body(h, inp):
+        return _scan_chunk(A, h, *inp)[::-1]
+
+    body = jax.checkpoint(lambda h, i: tuple(chunk_body(h, i)))
+    xs = tuple(v.reshape(B, n, c, -1).swapaxes(0, 1)
+               for v in (dt, B_, C_, xf))
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, Din)
+    y = y + p["D_skip"] * xf
+    return y, h_last
+
+
+def mamba_apply(p, cfg, x, *, impl: str = "xla"):
+    """Full mamba mixer, train/prefill. x: (B,S,D) -> (B,S,D)."""
+    Din = cfg.d_inner
+    xz = dense_apply(p["in_proj"], x)
+    x_in, z = jnp.split(xz, [Din], axis=-1)
+    x_c = jax.nn.silu(_causal_conv(p, x_in))
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssm_scan import ops as ssm_ops
+        A = -jnp.exp(p["A_log"])
+        dt, B_, C_ = _ssm_inputs(p, cfg, x_c)
+        y, _ = ssm_ops.ssm_scan(dt, A, B_, C_, x_c.astype(jnp.float32),
+                                interpret=(impl == "pallas_interpret"))
+        y = y + p["D_skip"] * x_c.astype(jnp.float32)
+    elif impl == "cost":
+        # roofline flop proxy: the recurrence as one elementwise pass
+        # (exact flop count per element; no while loop in the HLO)
+        A = -jnp.exp(p["A_log"])
+        dt, B_, C_ = _ssm_inputs(p, cfg, x_c)
+        xf = x_c.astype(jnp.float32)
+        dA = jnp.exp(dt[..., None] * A)                       # (B,S,Din,N)
+        h = dA * ((dt * xf)[..., None] * B_[:, :, None, :])
+        y = jnp.einsum("bsdn,bsn->bsd", h, C_)
+        y = y + p["D_skip"] * xf
+    elif impl == "mem":
+        # roofline memory proxy: the Pallas kernel streams dt,B,C,x ->
+        # y with the (.., Din, N) state VMEM-resident — no HBM residency
+        dt, B_, C_ = _ssm_inputs(p, cfg, x_c)
+        xf = x_c.astype(jnp.float32)
+        y = xf * dt + (jnp.sum(B_, -1, keepdims=True)
+                       + jnp.sum(C_, -1, keepdims=True)) * 1e-6
+        y = y + p["D_skip"] * xf
+    else:
+        y, _ = mamba_ssm(p, cfg, x_c)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return dense_apply(p["out_proj"], y)
+
+
+# ----------------------------------------------------------------- decode ---
+def mamba_state_spec(cfg, batch: int):
+    W = cfg.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, W - 1, cfg.d_inner),
+                                     dtype_of(cfg.dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.d_inner, cfg.ssm_state),
+                                    jnp.float32),
+    }
+
+
+def mamba_prefill(p, cfg, x):
+    """Full-seq forward that also returns the decode state."""
+    Din, W = cfg.d_inner, cfg.conv_width
+    xz = dense_apply(p["in_proj"], x)
+    x_in, z = jnp.split(xz, [Din], axis=-1)
+    x_c = jax.nn.silu(_causal_conv(p, x_in))
+    y, h_last = mamba_ssm(p, cfg, x_c)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)
+    state = {"conv": x_in[:, -(W - 1):, :], "ssm": h_last}
+    return out, state
+
+
+def mamba_decode(p, cfg, x1, state):
+    """One token. x1: (B,1,D); state per mamba_state_spec."""
+    Din, N, W = cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    xz = dense_apply(p["in_proj"], x1)
+    x_in, z = jnp.split(xz, [Din], axis=-1)          # (B,1,Din)
+    conv_buf = jnp.concatenate([state["conv"], x_in], axis=1)  # (B,W,Din)
+    xc = sum(conv_buf[:, i] * p["conv_w"][i] for i in range(W)) + p["conv_b"]
+    x_c = jax.nn.silu(xc)[:, None, :]                # (B,1,Din)
+    A = -jnp.exp(p["A_log"])
+    dt, B_, C_ = _ssm_inputs(p, cfg, x_c)
+    dA = jnp.exp(dt[:, 0, :, None] * A)
+    dBx = (dt[:, 0] * x_c[:, 0].astype(jnp.float32))[..., None] \
+        * B_[:, 0, None, :]
+    h = dA * state["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_[:, 0])
+    y = y + p["D_skip"] * x_c[:, 0].astype(jnp.float32)
+    y = y.astype(x1.dtype)[:, None, :] * jax.nn.silu(z)
+    out = dense_apply(p["out_proj"], y)
+    return out, {"conv": conv_buf[:, 1:], "ssm": h}

@@ -1,0 +1,3 @@
+from repro.panicroom.fs import BlockFS  # noqa: F401
+from repro.panicroom.syscalls import BSP, SYSCALL_NAMES  # noqa: F401
+from repro.panicroom.runner import run_benchmark  # noqa: F401

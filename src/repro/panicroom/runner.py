@@ -1,0 +1,32 @@
+"""PanicRoom runner: the SAME benchmark runs under 'sim' (interpret-mode
+Pallas kernels) and 'hw' (jit-compiled XLA) — the paper's
+identical-in-simulation-and-hardware contract, with the compute backend as
+the only swapped layer."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+from repro.panicroom.syscalls import BSP
+
+
+def run_benchmark(bench: Callable[[BSP, str], dict], platform: str,
+                  stdin: bytes = b"") -> Dict:
+    """bench(bsp, platform) must do ALL I/O through the BSP. ``platform``
+    is 'sim' or 'hw' and selects the kernel execution mode only."""
+    assert platform in ("sim", "hw")
+    bsp = BSP(stdin=stdin)
+    bsp.init()
+    t0 = time.perf_counter()
+    result = bench(bsp, platform)
+    dt = time.perf_counter() - t0
+    if bsp.exited is None:
+        bsp.exit(0)
+    return {
+        "platform": platform,
+        "wall_s": dt,
+        "exit_code": bsp.exited,
+        "stdout": bsp.stdout.decode(errors="replace"),
+        "syscalls": dict(bsp.counts),
+        "result": result,
+    }

@@ -1,0 +1,2 @@
+from repro.roofline.hw import HW_V5E  # noqa: F401
+from repro.roofline.hlo import collective_summary  # noqa: F401

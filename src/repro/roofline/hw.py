@@ -1,0 +1,30 @@
+"""Target-hardware models (TPU v5e) for the roofline / timing engine.
+
+The container runs on CPU; these constants describe the TARGET, per the
+assignment: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops_bf16: float       # per chip, FLOP/s
+    hbm_bw: float                # per chip, B/s
+    ici_link_bw: float           # per link per direction, B/s
+    ici_links: int               # links per chip (2D torus: 4)
+    hbm_bytes: float             # capacity per chip
+    vmem_bytes: float            # VMEM per core
+
+
+HW_V5E = Hardware(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+    vmem_bytes=128 * 2**20,
+)

@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline sweep: compositional cost analysis per (arch x shape) on the
+single-pod production mesh (the roofline table is single-pod per the
+assignment; the multi-pod pass is the dry-run's job).
+
+  PYTHONPATH=src python -m repro.roofline.run [--arch A --shape S] [--all]
+
+Writes experiments/roofline/<arch>__<shape>.json; the report generator
+(repro.roofline.report) turns these + the dry-run records into
+EXPERIMENTS.md tables.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import make_runtime
+from repro.roofline.compose import compose_cell
+from repro.roofline.hw import HW_V5E
+
+
+def run_cell(arch: str, shape_name: str, rt_overrides=None,
+             verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=False)
+    rt = make_runtime(cfg, mesh, shape.kind, rt_overrides)
+    t0 = time.time()
+    terms = compose_cell(cfg, shape, mesh, rt, HW_V5E)
+    rec.update(status="ok", seconds=round(time.time() - t0, 1),
+               runtime={"moe_impl": rt.moe_impl}, **terms)
+    if verbose:
+        print(f"[{arch} x {shape_name}] dom={terms['dominant']:10s} "
+              f"C={terms['compute_s']*1e3:8.2f}ms M={terms['memory_s']*1e3:8.2f}ms "
+              f"K={terms['collective_s']*1e3:8.2f}ms "
+              f"roofline={terms['roofline_fraction']*100:5.1f}% "
+              f"useful={terms['useful_ratio']*100:5.1f}%")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                rec = run_cell(arch, shape)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                       "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            with open(outdir / f"{arch}__{shape}.json", "w") as f:
+                json.dump(rec, f, indent=1, default=float)
+    print(f"done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

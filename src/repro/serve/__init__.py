@@ -1,0 +1,2 @@
+from repro.serve.engine import (  # noqa: F401
+    make_prefill_step, make_serve_step)

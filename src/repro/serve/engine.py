@@ -1,0 +1,20 @@
+"""Serving steps: prefill (prompt -> cache) and serve_step (one new token
+against a standing cache of seq_len — the decode_* / long_* dry-run target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens):
+        """tokens: (B,1) int32 -> (new_cache, logits (B,1,V))."""
+        return model.decode_step(params, cache, tokens)
+    return serve_step

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (  # noqa: F401
+    Axes, make_axes, param_shardings, batch_shardings, cache_shardings,
+    opt_shardings, replicated, fit_spec)

@@ -1,0 +1,239 @@
+"""Sharding rules: map parameter/batch/cache pytrees to PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+  train : FSDP over ("pod","data") on one weight dim, TP over "model"
+          (heads / d_ff / vocab), batch over ("pod","data").
+  serve : weights TP over "model" only (replicated over data — no per-step
+          gathers), batch over data, KV-cache *sequence* dim over "model"
+          (flash-decoding-style sequence-parallel decode; kv_heads of the
+          assigned archs never divide 16, so head-sharding is not viable).
+
+Every spec passes through ``fit_spec`` which drops mesh axes that do not
+divide the corresponding dim (e.g. whisper's vocab 51865 stays replicated).
+MoE weights: EP over "model" on the expert dim for the a2a impl; Expert-TP
+(d_ff over "model") otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey, GetAttrKey
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    mesh: Mesh
+    dp: Tuple[str, ...]      # batch axes ("pod","data") or ("data",)
+    fsdp: Tuple[str, ...]    # weight-shard axes in train mode, () in serve
+    model: str = "model"
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+
+def make_axes(mesh: Mesh, mode: str) -> Axes:
+    names = tuple(mesh.axis_names)
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    fsdp = dp if mode == "train" else ()
+    return Axes(mesh=mesh, dp=dp, fsdp=fsdp)
+
+
+# --------------------------------------------------------------- helpers ----
+def _axsize(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    return int(np.prod([mesh.shape[a] for a in entry]))
+
+
+def fit_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop axes that do not evenly divide their dim (e.g. odd vocabs)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _axsize(mesh, entry)
+        out.append(entry if (size > 1 and dim % size == 0) or size == 1
+                   else None)
+    return P(*out)
+
+
+def _names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            out.append(k.name)
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------- param rules -----
+def _param_rule(names, ndim, ax: Axes, moe_ep: bool) -> P:
+    n = set(names)
+    last2 = names[-2:]
+    f, m = ax.fsdp or None, ax.model
+
+    # --- embeddings / heads ---
+    if last2 == ("embed", "tok") or ("embed" in n and names[-1] == "tok"):
+        return P(m, f)
+    if names[-1] == "pos" or names[-1] == "enc_pos":
+        return P(None, None)
+    if "lm_head" in n:
+        return P(f, m) if names[-1] == "w" else P(m)
+    if "patch_proj" in n:
+        return P(None, None) if names[-1] == "w" else P()
+
+    # --- attention ---
+    if any(a in n for a in ("attn", "self", "cross")):
+        if names[-2] in ("q", "k", "v"):
+            return P(f, m) if names[-1] == "w" else P(m)
+        if names[-2] == "o":
+            return P(m, f) if names[-1] == "w" else P()
+        if names[-2] in ("q_norm", "k_norm"):
+            return P(None)
+
+    # --- MLP ---
+    if "mlp" in n:
+        if names[-2] in ("gate", "up"):
+            return P(f, m) if names[-1] == "w" else P(m)
+        if names[-2] == "down":
+            return P(m, f) if names[-1] == "w" else P()
+
+    # --- MoE ---
+    if "moe" in n:
+        if "router" in n:
+            return P(None, None)
+        if names[-1] in ("gate", "up"):
+            return P(m, f, None) if moe_ep else P(None, f, m)
+        if names[-1] == "down":
+            return P(m, None, f) if moe_ep else P(None, m, f)
+
+    # --- Mamba ---
+    if "mamba" in n:
+        leaf, parent = names[-1], names[-2]
+        if parent == "in_proj":
+            return P(f, m) if leaf == "w" else P(m)
+        if leaf == "conv_w":
+            return P(None, m)
+        if leaf == "conv_b":
+            return P(m)
+        if parent == "x_proj":
+            return P(m, None) if leaf == "w" else P(None)
+        if parent == "dt_proj":
+            return P(None, m) if leaf == "w" else P(m)
+        if leaf == "dt_bias":
+            return P(m)
+        if leaf == "A_log":
+            return P(m, None)
+        if leaf == "D_skip":
+            return P(m)
+        if parent == "out_proj":
+            return P(m, f) if leaf == "w" else P()
+
+    # --- RG-LRU ---
+    if "rglru" in n:
+        leaf, parent = names[-1], names[-2]
+        if parent in ("in_x", "in_z"):
+            return P(f, m) if leaf == "w" else P(m)
+        if leaf == "conv_w":
+            return P(None, m)
+        if leaf == "conv_b":
+            return P(m)
+        if parent in ("gate_a", "gate_x"):
+            return P(None, m) if leaf == "w" else P(m)
+        if leaf == "Lambda":
+            return P(m)
+        if parent == "out":
+            return P(m, f) if leaf == "w" else P()
+
+    # norms and everything residual: replicate
+    return P(*([None] * ndim))
+
+
+_STACKED_MARKERS = ("blocks", "encoder", "decoder")
+
+
+def param_shardings(mesh: Mesh, param_specs, mode: str = "train",
+                    moe_ep: bool = False):
+    """param_specs: eval_shape tree -> NamedSharding tree."""
+    ax = make_axes(mesh, mode)
+
+    def per_leaf(path, leaf):
+        names = _names(path)
+        stacked = any(mk in names for mk in _STACKED_MARKERS) \
+            and "tail" not in names
+        ndim = leaf.ndim - (1 if stacked else 0)
+        spec = _param_rule(names, ndim, ax, moe_ep)
+        entries = list(spec)[:ndim] + [None] * (ndim - len(spec))
+        if stacked:
+            entries = [None] + entries
+        return NamedSharding(mesh, fit_spec(leaf.shape, P(*entries), mesh))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, param_specs)
+
+
+# ----------------------------------------------------------- batch rules ----
+def batch_shardings(mesh: Mesh, batch_specs, mode: str = "train"):
+    ax = make_axes(mesh, mode)
+
+    def per_leaf(path, leaf):
+        spec = P(ax.dp, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, fit_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, batch_specs)
+
+
+# ----------------------------------------------------------- cache rules ----
+def cache_shardings(mesh: Mesh, cache_specs, mode: str = "serve"):
+    """KV caches: batch over dp, *sequence* dim over "model" (seq-parallel
+    decode). SSM/LRU states: feature dim over "model". Stacked leading dims
+    (periods / layers) handled via path markers."""
+    ax = make_axes(mesh, mode)
+    m = ax.model
+
+    def per_leaf(path, leaf):
+        names = _names(path)
+        if names[-1] == "pos":
+            return replicated(ax.mesh)
+        stacked = any(mk in names for mk in ("scanned", "self", "cross")) \
+            and "tail" not in names
+        base = 1 if stacked else 0
+        leaf_nd = leaf.ndim
+        entries = [None] * leaf_nd
+        if names[-1] in ("k", "v", "ck", "cv"):
+            # (stack?, B, T, K, hd): batch over dp, seq over model
+            entries[base + 0] = ax.dp
+            entries[base + 1] = m
+        elif names[-1] == "ssm":
+            entries[base + 0] = ax.dp        # (B, Din, N)
+            entries[base + 1] = m
+        elif names[-1] == "h":
+            entries[base + 0] = ax.dp        # (B, W)
+            entries[base + 1] = m
+        elif names[-1] == "conv":
+            entries[base + 0] = ax.dp        # (B, cw-1, F)
+            entries[base + 2] = m
+        return NamedSharding(ax.mesh, fit_spec(leaf.shape, P(*entries),
+                                               ax.mesh))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache_specs)
+
+
+def opt_shardings(mesh: Mesh, params_shardings):
+    """AdamW state {"m","v","count"}: m/v mirror params, count replicated."""
+    return {"m": params_shardings, "v": params_shardings,
+            "count": replicated(mesh)}

@@ -1,0 +1,74 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+At 1000+-node scale the cross-pod (DCN) gradient sync is the bandwidth
+cliff: int8 with per-tensor scales cuts it 4x vs f32 / 2x vs bf16. Error
+feedback keeps it convergent: the quantization residual is carried and
+added back before the next round (Seide et al. / EF-SGD), so the scheme is
+unbiased over time.
+
+Two integration points:
+  - ``compressed_psum``: a drop-in psum for shard_map code paths that own
+    an explicit gradient all-reduce (the cross-pod axis);
+  - ``make_compressor``: a params-shaped transform applied to grads in the
+    train step (simulating the wire format end-to-end — what the tests and
+    the benchmark sweep use on this single-process container).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """f32/bf16 -> (int8, scale). Symmetric per-tensor."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_leaf(g: jax.Array, residual: jax.Array):
+    """Error-feedback round: returns (decompressed g_hat, new residual)."""
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = quantize(corrected)
+    g_hat = dequantize(q, scale)
+    return g_hat, corrected - g_hat
+
+
+def init_residuals(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def make_compressor():
+    """tree-level transform: (grads, residuals) -> (g_hat, residuals')."""
+    def apply(grads, residuals):
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(residuals)
+        outs = [ef_compress_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+        return (treedef.unflatten([o[0] for o in outs]),
+                treedef.unflatten([o[1] for o in outs]))
+    return apply
+
+
+def compressed_pmean(x: jax.Array, axis_name: str, residual: jax.Array):
+    """int8-on-the-wire gradient mean with error feedback, for shard_map
+    gradient exchanges over an explicit cross-pod axis.
+
+    A shared scale (pmax of local absmax — one scalar all-reduce) makes the
+    int8 payloads sum-compatible; the residual is taken against the shared
+    scale so feedback accounts for exactly what the wire lost."""
+    corrected = x.astype(jnp.float32) + residual
+    local_max = jnp.max(jnp.abs(corrected))
+    scale = jnp.maximum(jax.lax.pmax(local_max, axis_name), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_residual = corrected - q.astype(jnp.float32) * scale
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    summed_q = jax.lax.psum(q.astype(jnp.int32), axis_name)  # int8 payload
+    out = summed_q.astype(jnp.float32) * scale / n
+    return out, new_residual

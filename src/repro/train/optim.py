@@ -1,0 +1,70 @@
+"""AdamW, implemented directly (no optax): f32 moments over cfg-dtype params.
+
+Mixed-precision policy: params stored in model dtype (bf16), moments in f32,
+update math in f32, cast back. ZeRO-style sharding falls out of the sharding
+rules (m/v mirror param specs, which are FSDP-sharded in train mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: OptConfig, count):
+    warm = jnp.minimum(1.0, (count + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt):
+    count = opt["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = _schedule(cfg, opt["count"])
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * pf
+        return (pf - lr * step).astype(p.dtype), m, v
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(
+        leaves_p, jax.tree.leaves(grads),
+        jax.tree.leaves(opt["m"]), jax.tree.leaves(opt["v"]))]
+    new_params = treedef.unflatten([r[0] for r in res])
+    new_opt = {"m": treedef.unflatten([r[1] for r in res]),
+               "v": treedef.unflatten([r[2] for r in res]),
+               "count": count}
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

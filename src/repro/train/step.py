@@ -1,0 +1,95 @@
+"""The jit-compiled train step: value_and_grad -> (EF-compression) -> AdamW.
+
+This function is the DUT of the co-emulation layer (DESIGN.md §2): the
+P-Shell taps thread through ``model.loss`` and surface as the ``aux`` output
+(commit checksums, coverage toggles, router stats). Instrumentation never
+feeds back into the state update — non-interference is structural.
+
+Options:
+  grad_compress — error-feedback int8 gradient compression (the wire format
+  of the cross-pod sync; see train/compress.py). Adds an ``ef`` residual
+  tree to the train state.
+  accum_steps  — microbatch gradient accumulation (scan over micro-slices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optim import OptConfig, adamw_init, adamw_update
+from repro.train.compress import init_residuals, make_compressor
+
+
+def init_state(model, key, opt_cfg: OptConfig = OptConfig(),
+               grad_compress: bool = False):
+    params = model.init(key)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if grad_compress:
+        state["ef"] = init_residuals(params)
+    return state
+
+
+def state_specs(model, opt_cfg: OptConfig = OptConfig(),
+                grad_compress: bool = False):
+    return jax.eval_shape(
+        functools.partial(init_state, model, opt_cfg=opt_cfg,
+                          grad_compress=grad_compress),
+        jax.random.key(0))
+
+
+def _microbatch_grads(loss_fn, params, batch, accum_steps: int):
+    """lax.scan over micro-slices of the batch; mean loss and grads."""
+    def slice_mb(i, x):
+        mb = x.shape[0] // accum_steps
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+    def body(carry, i):
+        acc_g, acc_l, acc_m = carry
+        mb = jax.tree.map(functools.partial(slice_mb, i), batch)
+        (loss, (metrics, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             acc_g, grads)
+        return (acc_g, acc_l + loss, acc_m), aux
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g, loss, _), auxes = jax.lax.scan(
+        body, (zeros, jnp.float32(0.0), None), jnp.arange(accum_steps))
+    n = jnp.float32(accum_steps)
+    grads = jax.tree.map(lambda a: a / n, g)
+    aux = jax.tree.map(lambda x: x[-1], auxes)   # last microbatch's taps
+    return loss / n, grads, aux
+
+
+def make_train_step(model, opt_cfg: OptConfig = OptConfig(),
+                    with_aux: bool = True, grad_compress: bool = False,
+                    accum_steps: int = 1):
+    compressor = make_compressor() if grad_compress else None
+
+    def train_step(state, batch):
+        if accum_steps > 1:
+            loss, grads, aux = _microbatch_grads(
+                model.loss, state["params"], batch, accum_steps)
+            metrics = {"loss": loss, "ce": loss,
+                       "moe_aux": jnp.float32(0.0)}
+        else:
+            (loss, (metrics, aux)), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(state["params"], batch)
+
+        new_state = {}
+        if grad_compress:
+            grads, ef = compressor(grads, state["ef"])
+            new_state["ef"] = ef
+        params, opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, state["opt"])
+        new_state.update(params=params, opt=opt, step=state["step"] + 1)
+        metrics = {**metrics, **opt_metrics}
+        if with_aux:
+            return new_state, metrics, aux
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,43 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def checksum(x: jax.Array) -> jax.Array:
+    """Cheap commit-stream checksum of a tensor: (mean, mean|x|) in f32.
+
+    Used by the P-Shell commit stream (DESIGN.md C3): tolerant cross-impl
+    comparison DUT-vs-oracle, and bitwise comparison DUT-vs-DUT.
+    """
+    xf = x.astype(jnp.float32)
+    return jnp.stack([jnp.mean(xf), jnp.mean(jnp.abs(xf))])
+
+
+def has_nan_bit(x: jax.Array) -> jax.Array:
+    """Single-bit 'activation overflow' coverage toggle (f32 nan/inf)."""
+    xf = x.astype(jnp.float32)
+    return jnp.any(~jnp.isfinite(xf))
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree) if hasattr(l, "shape"))
+
+
+def tree_count(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree)
+               if hasattr(l, "shape"))
+
+
+def fold_key(key: jax.Array, *names: str) -> jax.Array:
+    for n in names:
+        key = jax.random.fold_in(key, abs(hash(n)) % (2**31))
+    return key

@@ -1,0 +1,60 @@
+"""Unit tests for the HLO collective parser (the roofline's data source)."""
+import pytest
+
+from repro.roofline.hlo import (collective_summary, parse_collectives,
+                                _shape_bytes, _split_computations)
+
+HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body.1 (param: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ar = f32[16,128] all-reduce(%x), channel_id=1, replica_groups=[4,4]<=[16], to_apply=%add, metadata={op_name="jit(f)/inner"}
+  ROOT %t = (s32[], f32[16,128]) tuple(%i, %ar)
+}
+
+ENTRY %main (p0: f32[16,128], p1: bf16[8,256]) -> f32[16,128] {
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = bf16[8,4096] all-gather(%p1), channel_id=2, replica_groups=[1,16]<=[16], dimensions={1}, metadata={op_name="jit(f)/gather"}
+  %cp = f32[4,64] collective-permute(%q), channel_id=3, source_target_pairs={{0,1},{1,0}}
+  ROOT %out = f32[16,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "16,128") == 16 * 128 * 4
+    assert _shape_bytes("bf16", "8,4096") == 8 * 4096 * 2
+    assert _shape_bytes("pred", "") == 1
+
+
+def test_computation_split_and_while_multiplier():
+    comps, entry = _split_computations(HLO)
+    assert entry == "main"
+    assert "body.1" in comps and "add" in comps
+    colls = parse_collectives(HLO, 16)
+    by_kind = {c.kind: c for c in colls}
+    ar = by_kind["all-reduce"]
+    assert ar.multiplier == 12.0          # while trip count applied
+    assert ar.group_size == 4             # iota groups [4,4]<=[16]
+    assert ar.out_bytes == 16 * 128 * 4
+    ag = by_kind["all-gather"]
+    assert ag.multiplier == 1.0
+    assert ag.group_size == 16
+    cp = by_kind["collective-permute"]
+    assert cp.group_size == 2
+
+
+def test_summary_traffic_factors():
+    s = collective_summary(HLO, 16)
+    # ring all-reduce: 2*(n-1)/n per operand byte, n=4, x12 trips
+    ar_eff = 12 * (16 * 128 * 4) * 2 * 3 / 4
+    assert abs(s["by_kind"]["all-reduce"]["effective_bytes"] - ar_eff) < 1
+    # all-gather: (n-1)/n of OUTPUT bytes
+    ag_eff = (8 * 4096 * 2) * 15 / 16
+    assert abs(s["by_kind"]["all-gather"]["effective_bytes"] - ag_eff) < 1
+    assert s["by_kind"]["all-reduce"]["count"] == 12
+    assert 0.0 <= s["f32_bytes_share"] <= 1.0

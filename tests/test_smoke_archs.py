@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-gradient step + prefill/decode on CPU; asserts shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config, get_config
+from repro.models import build_model, input_specs
+from repro.models.model import decode_cache_len
+from repro.models.runtime import Runtime
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, seq=S, batch=B, train=True):
+    ks = jax.random.split(key, 4)
+    if cfg.family == "vlm":
+        toks = jax.random.randint(ks[0], (batch, seq - cfg.num_patches), 0,
+                                  cfg.vocab_size)
+        out = {"tokens": toks,
+               "patches": jax.random.normal(
+                   ks[1], (batch, cfg.num_patches, cfg.patch_embed_dim),
+                   jnp.bfloat16)}
+    elif cfg.family == "encdec":
+        out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                            cfg.vocab_size),
+               "frames": jax.random.normal(
+                   ks[1], (batch, cfg.encoder_seq, cfg.d_model),
+                   jnp.bfloat16)}
+    else:
+        out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                            cfg.vocab_size)}
+    if train:
+        out["labels"] = jax.random.randint(ks[2], out["tokens"].shape, 0,
+                                           cfg.vocab_size)
+    return out
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_grad(arch, rng):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    params = model.init(rng)
+
+    logits, aux = jax.jit(model.logits)(params, make_batch(cfg, rng,
+                                                           train=False))
+    n_text = S - (cfg.num_patches if cfg.family == "vlm" else 0)
+    exp_len = S if cfg.family != "vlm" else S  # prefix + text
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab_size
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN/inf logits"
+
+    def loss_fn(p):
+        return model.loss(p, make_batch(cfg, rng))[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss)), f"{arch}: NaN loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, \
+        f"{arch}: bad grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode(arch, rng):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = make_batch(cfg, rng, train=False)
+    max_len = S + 8
+
+    cache, logits = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len))(params, batch)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN prefill"
+
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    step = jax.jit(model.decode_step)
+    for _ in range(3):
+        cache, logits = step(params, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN decode"
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact(arch):
+    """The FULL config matches the assignment numbers (no allocation)."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 151936),
+        "mixtral-8x7b": (32, 4096, 32, 8, 32000),
+        "internlm2-20b": (48, 6144, 48, 8, 92544),
+        "glm4-9b": (40, 4096, 32, 2, 151552),
+        "command-r-35b": (40, 8192, 64, 8, 256000),
+        "granite-8b": (36, 4096, 32, 8, 49152),
+        "whisper-small": (12, 768, 12, 12, 51865),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 256000),
+        "internvl2-1b": (24, 896, 14, 2, 151655),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 65024),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_param_counts_sane():
+    """Analytic param counts are in the right ballpark for the named sizes."""
+    approx = {
+        "qwen3-moe-30b-a3b": (29e9, 32e9),
+        "mixtral-8x7b": (45e9, 49e9),
+        "internlm2-20b": (18e9, 22e9),
+        "glm4-9b": (8e9, 10.5e9),
+        # assignment numbers give 30.3B analytically (40L*8192*22528 + tied
+        # 256k embed); the marketed "35B" counts differently
+        "command-r-35b": (28e9, 33e9),
+        "granite-8b": (7e9, 9e9),
+        "falcon-mamba-7b": (6.5e9, 8e9),
+        "recurrentgemma-2b": (2.3e9, 3.3e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
