@@ -31,6 +31,7 @@ def main():
                for i in range(6)]
 
     emu = CoEmulator(dut, orc, rtol=0.3)
+    emu.verify(s_dut, s_orc, batches[:1])                 # compile both sides
     t0 = time.perf_counter()
     rep = emu.verify(s_dut, s_orc, batches)
     dt = time.perf_counter() - t0
@@ -38,6 +39,17 @@ def main():
     emit("coemu_verify", dt / rep.steps * 1e6,
          f"commits_per_s={commits/dt:.0f}|diverged={rep.diverged}"
          f"|max_rel_err={rep.max_rel_err:.2e}")
+
+    # group-locked: one scan-fused dispatch per side per window
+    group = len(batches)
+    emu.verify(s_dut, s_orc, batches, group_size=group)   # compile
+    t0 = time.perf_counter()
+    rep_g = emu.verify(s_dut, s_orc, batches, group_size=group)
+    dt_g = time.perf_counter() - t0
+    emit("coemu_verify_grouped", dt_g / rep_g.steps * 1e6,
+         f"group={group}|commits_per_s={commits/dt_g:.0f}"
+         f"|speedup={dt/dt_g:.2f}x|diverged={rep_g.diverged}")
+
     det = CoEmulator.determinism(dut, s_dut, batches[0])
     emit("coemu_determinism", 0.0, f"bitwise_reproducible={det}")
 

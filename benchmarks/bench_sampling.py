@@ -1,5 +1,8 @@
 """Paper Fig. 11 + Fig. 12: co-emulation slowdown vs sampling interval, and
-stall-stack invariance across intervals (time-proportionality)."""
+stall-stack invariance across intervals (time-proportionality) — plus the
+fused step-group engine: one scan-compiled dispatch per clock-gated window
+vs one dispatch per step, on the same config (the FireSim amortization
+claim: keep the device busy, amortize host crossings over the window)."""
 from __future__ import annotations
 
 import numpy as np
@@ -12,10 +15,10 @@ from repro.core import (PShell, default_shell_config, make_ingest, drain,
 from repro.data import make_batch_fn
 from repro.models import build_model
 from repro.models.runtime import Runtime
-from repro.train import make_train_step, init_state
+from repro.train import make_train_step, make_group_step, init_state
 from repro.train.optim import OptConfig
 
-INTERVALS = (1, 2, 5, 10, 100)
+INTERVALS = (1, 2, 4, 8, 20)
 STEPS = 20
 
 
@@ -24,16 +27,20 @@ def main():
     model = build_model(cfg, Runtime(taps=frozenset({"commits",
                                                      "coverage"})))
     step = jax.jit(make_train_step(model))
+    ingest = make_ingest(cfg)
     batchf = make_batch_fn(cfg, 4, 32)
-    batches = [{k: jax.numpy.asarray(v) for k, v in batchf(i).items()}
-               for i in range(STEPS)]
+    np_batches = [batchf(i) for i in range(STEPS)]
+    batches = [{k: jax.numpy.asarray(v) for k, v in b.items()}
+               for b in np_batches]
     state0 = init_state(model, jax.random.key(0))
+    group_step = make_group_step(model, ingest=ingest)
 
     stacks = {}
     times = {}
+    times_fused = {}
     for interval in INTERVALS:
         shell_cfg = default_shell_config(cfg, sample_interval=interval)
-        shell = PShell(shell_cfg, make_ingest(cfg))
+        shell = PShell(shell_cfg, ingest)
         wrapped = shell.wrap(step)
 
         def run():
@@ -50,15 +57,29 @@ def main():
             run.prof = prof
             return prof
 
-        us = timeit(run, n=3, warmup=1)
+        def run_fused():
+            # donate=False: state0 is reused across timed iterations, so
+            # its buffers must survive the dispatch (matches the per-step
+            # baseline, which cannot donate either)
+            state, m, sh = shell.run_grouped(group_step, state0, np_batches,
+                                             donate=False)
+            jax.block_until_ready(m["loss"])
+
+        us = timeit(run, n=5, warmup=1)
         times[interval] = us
         stacks[interval] = run.prof.live_stack().fractions()
+        times_fused[interval] = timeit(run_fused, n=5, warmup=1)
 
     base = times[max(INTERVALS)]
     for interval in INTERVALS:
         emit(f"fig11_sampling_interval_{interval}",
              times[interval] / STEPS,
              f"slowdown={times[interval]/base:.2f}x")
+    for interval in INTERVALS:
+        speedup = times[interval] / times_fused[interval]
+        emit(f"fig11_fused_interval_{interval}",
+             times_fused[interval] / STEPS,
+             f"fused_speedup={speedup:.2f}x_vs_per_step")
 
     # Fig 12: stall-stack variance across intervals
     cats = sorted(stacks[1])

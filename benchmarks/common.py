@@ -1,16 +1,39 @@
 """Shared benchmark helpers. Every bench prints `name,us_per_call,derived`
-CSV rows via emit()."""
+CSV rows via emit(); write_results() dumps the same rows as machine-readable
+JSON (name -> {us_per_call, derived}) so the perf trajectory is trackable
+across PRs."""
 from __future__ import annotations
 
+import json
 import time
 
 ROWS = []
+RESULTS = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    RESULTS[name] = {"us_per_call": round(float(us_per_call), 3),
+                     "derived": derived}
     print(row, flush=True)
+
+
+def write_results(path: str = "BENCH_results.json", merge: bool = False):
+    """``merge=True`` (used by filtered runs) folds this run's rows into an
+    existing file instead of clobbering the other benchmarks' entries."""
+    out = dict(RESULTS)
+    if merge:
+        try:
+            with open(path) as f:
+                out = {**json.load(f), **RESULTS}
+        except (FileNotFoundError, json.JSONDecodeError):
+            pass
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(RESULTS)} results to {path}"
+          + (f" (merged, {len(out)} total)" if merge else ""), flush=True)
 
 
 def timeit(fn, n: int = 5, warmup: int = 1) -> float:

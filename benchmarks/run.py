@@ -1,12 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV. Run:
+Prints ``name,us_per_call,derived`` CSV and writes the same rows to
+``BENCH_results.json`` (machine-readable, for cross-PR perf tracking). Run:
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run sampling   # substring filter
 """
 from __future__ import annotations
 
 import sys
 import traceback
+
+from benchmarks.common import write_results
 
 MODULES = [
     "benchmarks.bench_kernels",       # per-kernel us/call + allclose
@@ -20,15 +24,19 @@ MODULES = [
 
 
 def main() -> None:
+    filters = sys.argv[1:]
+    mods = [m for m in MODULES
+            if not filters or any(f in m for f in filters)]
     print("name,us_per_call,derived")
     failed = []
-    for mod_name in MODULES:
+    for mod_name in mods:
         try:
             mod = __import__(mod_name, fromlist=["main"])
             mod.main()
         except Exception:
             traceback.print_exc()
             failed.append(mod_name)
+    write_results(merge=bool(filters))
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -4,7 +4,8 @@ toggle coverage, stall-stack profiling, event-driven timing models, and
 Scale-Down subsystem decomposition."""
 from repro.core.pshell import (  # noqa: F401
     FifoSpec, ShellConfig, PShell, shell_init, csr_read, csr_write,
-    csr_accum, fifo_push, fifo_push_many, drain)
+    csr_accum, fifo_push, fifo_push_many, drain, group_reset,
+    stack_batches)
 from repro.core.commit import default_shell_config, make_ingest  # noqa: F401
 from repro.core.coemu import CoEmulator  # noqa: F401
 from repro.core.coverage import CoverageMap  # noqa: F401

@@ -7,6 +7,13 @@ checksums through the P-Shell) are cross-verified each step — the Dromajo
 pattern. The report localizes the FIRST divergent (step, layer), which is
 what makes injected faults debuggable (the mutation tests assert the fault
 layer is identified exactly).
+
+Group-locked mode (``group_size > 1``): DUT and oracle each dispatch ONCE
+per clock-gated window — a lax.scan over the window's batch stack whose ys
+carry every step's checksums — so host crossings amortize over the window
+while localization stays exact: the per-step commit streams are recovered
+from the scanned aux and compared step by step, bit-for-bit equivalent to
+step-locked verification.
 """
 from __future__ import annotations
 
@@ -56,8 +63,18 @@ class CoEmulator:
         self.dut_step = dut_step
         self.oracle_step = oracle_step
         self.rtol = rtol
+        self._group_fns: Dict[int, Callable] = {}  # id(step) -> jitted group
 
-    def verify(self, state_dut, state_orc, batches) -> CoEmuReport:
+    def verify(self, state_dut, state_orc, batches,
+               group_size: int = 1) -> CoEmuReport:
+        """Cross-verify commit streams. ``group_size=1`` is the step-locked
+        Dromajo loop; ``group_size=N`` dispatches each side once per
+        N-step window (scan-fused) and recovers per-step checksums from the
+        scanned ys — same localization, 2 dispatches per window instead of
+        2N."""
+        if group_size > 1:
+            return self._verify_grouped(state_dut, state_orc,
+                                        list(batches), group_size)
         first = None
         max_err = 0.0
         loss_diff = 0.0
@@ -67,18 +84,69 @@ class CoEmulator:
             state_orc, m_orc, aux_orc = self.oracle_step(state_orc, batch)
             cks_d = np.asarray(layer_checksums(aux_dut), np.float64)
             cks_o = np.asarray(layer_checksums(aux_orc), np.float64)
-            err = _rel_err(cks_d, cks_o).max(axis=1)      # (L,)
-            max_err = max(max_err, float(err.max()))
+            first, max_err = self._compare(cks_d[None], cks_o[None], i,
+                                           first, max_err)
             loss_diff = max(loss_diff, float(abs(
                 np.float64(m_dut["loss"]) - np.float64(m_orc["loss"]))))
-            bad = np.nonzero(err > self.rtol)[0]
-            if bad.size and first is None:
-                first = Divergence(step=i, layer=int(bad[0]),
-                                   rel_err=float(err[bad[0]]))
             steps += 1
         return CoEmuReport(steps=steps, diverged=first is not None,
                            first=first, max_rel_err=max_err,
                            loss_max_abs_diff=loss_diff)
+
+    # ------------------------------------------------------- group-locked --
+    def _group_fn(self, step: Callable):
+        """One fused dispatch per window: scan ``step`` over the batch
+        stack, ys = (per-step checksums, per-step loss)."""
+        def body(state, batch):
+            state, metrics, aux = step(state, batch)
+            return state, (layer_checksums(aux).astype(jnp.float32),
+                           metrics["loss"].astype(jnp.float32))
+
+        return jax.jit(lambda state, stack: jax.lax.scan(body, state, stack))
+
+    def _cached_group(self, step: Callable):
+        key = id(step)
+        if key not in self._group_fns:
+            self._group_fns[key] = self._group_fn(step)
+        return self._group_fns[key]
+
+    def _verify_grouped(self, state_dut, state_orc, batches,
+                        group_size: int) -> CoEmuReport:
+        dut_group = self._cached_group(self.dut_step)
+        orc_group = self._cached_group(self.oracle_step)
+
+        first = None
+        max_err = 0.0
+        loss_diff = 0.0
+        steps = 0
+        for g0 in range(0, len(batches), group_size):
+            window = batches[g0:g0 + group_size]
+            stack = jax.tree.map(lambda *xs: jnp.stack(xs), *window)
+            state_dut, (cks_d, loss_d) = dut_group(state_dut, stack)
+            state_orc, (cks_o, loss_o) = orc_group(state_orc, stack)
+            cks_d = np.asarray(cks_d, np.float64)         # (g, L, 2)
+            cks_o = np.asarray(cks_o, np.float64)
+            first, max_err = self._compare(cks_d, cks_o, g0, first, max_err)
+            loss_diff = max(loss_diff, float(np.max(np.abs(
+                np.asarray(loss_d, np.float64)
+                - np.asarray(loss_o, np.float64)))))
+            steps += len(window)
+        return CoEmuReport(steps=steps, diverged=first is not None,
+                           first=first, max_rel_err=max_err,
+                           loss_max_abs_diff=loss_diff)
+
+    def _compare(self, cks_d, cks_o, step0, first, max_err):
+        """Per-step (g, L, 2) checksum comparison; records the first
+        divergent (step, layer) in window order."""
+        err = _rel_err(cks_d, cks_o).max(axis=2)          # (g, L)
+        max_err = max(max_err, float(err.max()))
+        if first is None:
+            bad_steps, bad_layers = np.nonzero(err > self.rtol)
+            if bad_steps.size:
+                s, l = int(bad_steps[0]), int(bad_layers[0])
+                first = Divergence(step=step0 + s, layer=l,
+                                   rel_err=float(err[s, l]))
+        return first, max_err
 
     @staticmethod
     def determinism(step: Callable, state, batch) -> bool:
@@ -103,15 +171,17 @@ def inject_fault(params, cfg, layer: int, scale: float = 100.0):
         blocks = list(stack["blocks"])
         blk = blocks[pos]
 
-        def per_leaf(path_leaf):
-            return path_leaf
-
-        # perturb the first 2D+ leaf of this position's stacked params
+        # perturb the first (n_periods, ...) weight leaf of this position
         leaves, treedef = jax.tree.flatten(blk)
         for i, leaf in enumerate(leaves):
-            if leaf.ndim >= 3:  # (n_periods, ...)
+            if leaf.ndim >= 3:
                 leaves[i] = leaf.at[period].mul(scale)
                 break
+        else:
+            raise ValueError(
+                f"inject_fault: block position {pos} (layer {layer}) has no "
+                f"stacked weight leaf with ndim >= 3 to perturb; leaf shapes"
+                f" = {[tuple(l.shape) for l in leaves]}")
         blocks[pos] = treedef.unflatten(leaves)
         return {**stack, "blocks": tuple(blocks)}
 

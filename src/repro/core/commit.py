@@ -67,7 +67,14 @@ def nan_bits(aux):
 def default_shell_config(cfg, sample_interval: int = 1,
                          commit_depth: int | None = None) -> ShellConfig:
     """Parameterize the shell for one architecture (the paper's
-    'users parameterize the P-Shell' step)."""
+    'users parameterize the P-Shell' step).
+
+    FIFO depths are sized PER GROUP: each fused window ingests
+    ``sample_interval`` steps before the host drains, and every step pushes
+    L commit rows, so the commits FIFO must hold >= sample_interval * L
+    entries for lossless capture (interval=1 == cycle-accurate). Undersize
+    it (``commit_depth``) and overflow is dropped deterministically with
+    exact credit accounting — never blocking the device."""
     L = cfg.num_layers + cfg.encoder_layers
     depth = commit_depth or max(4, sample_interval) * max(L, 1)
     csrs = {
@@ -91,7 +98,10 @@ def default_shell_config(cfg, sample_interval: int = 1,
 
 
 def make_ingest(cfg):
-    """ingest(shell, aux, metrics) -> shell. Pure; jit-safe."""
+    """ingest(shell, aux, metrics) -> shell. Pure and shape-static, so it is
+    safe both as a per-step jit epilogue and as a lax.scan body stage inside
+    a fused step group (no host callbacks, no data-dependent shapes; FIFO
+    overflow is resolved with credit arithmetic, not control flow)."""
     def ingest(shell, aux, metrics):
         cks = layer_checksums(aux)                        # (L, 2)
         L = cks.shape[0]

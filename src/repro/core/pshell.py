@@ -14,9 +14,28 @@ host drains. interval=1 == cycle-accurate co-emulation (nothing can drop if
 FIFO depth >= events/step); larger intervals trade completeness for speed —
 exactly the paper's gating-granularity knob (Fig. 11).
 
-Non-interference is structural: shell state is threaded functionally beside
-the model state and never feeds back into it; tests assert bit-identical
-model state with the shell enabled, disabled, and at different intervals.
+Fused step groups (the FireSim lesson: keep the FPGA busy while the host
+lags): ``PShell.run_grouped`` compiles the whole clock-gated window into ONE
+jit dispatch — a ``lax.scan`` over a stacked batch group whose body is
+step + ingest — instead of ``sample_interval`` separate dispatches with a
+Python re-thread between each. Per-step metrics accumulate on device and are
+materialized once per group; the host drain of group *i* is overlapped with
+the (async-dispatched) device compute of group *i+1* by double-buffering the
+shell: the group's output shell is kept aside as the drain snapshot while
+``group_reset`` derives a fresh (count=0, new buffer) shell that the next
+group consumes. Model/optimizer state is donated into the group dispatch so
+large buffers are reused in place.
+
+Non-interference invariants (tests assert all of these):
+  1. Shell state is threaded functionally BESIDE the model state and never
+     feeds back into it: model state is bit-identical with the shell
+     enabled, disabled, and at any interval.
+  2. Grouped execution is bit-identical to per-step execution: for any
+     interval, final model/opt state AND the drained commit records (FIFO
+     payload order, counts, cumulative dropped credits, CSR values) match
+     the per-step loop exactly.
+  3. Drain resets FIFO occupancy but never the cumulative ``dropped``
+     credit counter — overflow accounting is exact across group boundaries.
 """
 from __future__ import annotations
 
@@ -116,6 +135,39 @@ def fifo_push_many(state, name: str, payloads):
     return {**state, "fifo": {**state["fifo"], name: new}}
 
 
+def group_reset(shell):
+    """Device-side inter-group reset (jit-safe): FIFO occupancy returns to
+    zero with a FRESH buffer (so the previous group's output shell stays
+    valid as a host-drain snapshot while the next group overwrites this
+    one), the cumulative ``dropped`` credit counter and all CSR accumulators
+    carry forward. The host-side ``drain`` of the snapshot is thereby free
+    to overlap the next group's device compute."""
+    new_fifo = {}
+    for name, f in shell["fifo"].items():
+        new_fifo[name] = {"buf": jnp.zeros_like(f["buf"]),
+                          "count": jnp.zeros((), jnp.int32),
+                          "dropped": f["dropped"]}
+    return {**shell, "fifo": new_fifo}
+
+
+_RESET_JIT = None
+
+
+def _reset_jitted():
+    global _RESET_JIT
+    if _RESET_JIT is None:
+        _RESET_JIT = jax.jit(group_reset)
+    return _RESET_JIT
+
+
+def stack_batches(group):
+    """Stack a list of per-step batches into one (g, ...) batch stack for a
+    fused group dispatch. Host-side numpy stacking so the device transfer is
+    a single contiguous upload per leaf."""
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                        *group)
+
+
 # -------------------------------------------------------------- host side ---
 def drain(state):
     """Host-side drain: returns (records, reset_state). Must be called on
@@ -146,6 +198,7 @@ class PShell:
                  ingest: Callable[[Any, Any, Any], Any]):
         self.cfg = cfg
         self.ingest = ingest
+        self._jit_cache: Dict[Any, Callable] = {}
 
     def init(self):
         return shell_init(self.cfg)
@@ -176,3 +229,68 @@ class PShell:
                 if on_drain is not None:
                     on_drain(i, records)
         return state, metrics, shell
+
+    def compile_group(self, group_step, donate: Optional[bool] = None):
+        """Jit a group_step for fused dispatch, caching per (fn, donation).
+        Returns (jitted_group, jitted_reset). ``donate=None`` donates
+        model/opt state (argnum 0) wherever donation is real — it is a
+        no-op warning on CPU backends. Callers that redispatch from the
+        SAME state object (benchmark timing loops) must pass donate=False
+        so the input buffers survive."""
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        key = (id(group_step), donate)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(
+                group_step, donate_argnums=(0,) if donate else ())
+        return self._jit_cache[key], _reset_jitted()
+
+    def run_grouped(self, group_step, state, batches, shell=None,
+                    on_drain: Optional[Callable[[int, dict], None]] = None,
+                    donate: Optional[bool] = None):
+        """Fused host loop: ONE jit dispatch per clock-gated window.
+
+        ``group_step(state, shell, batch_stack) -> (state, shell,
+        metrics_stack)`` runs ``sample_interval`` steps as a lax.scan (see
+        train.step.make_group_step). Per window this loop:
+
+          1. stacks the window's batches and dispatches the fused group
+             (async) — model/opt state donated so buffers reuse in place;
+          2. derives the next group's shell via ``group_reset`` (device
+             side, async) and immediately dispatches nothing else on it;
+          3. only THEN drains the PREVIOUS window's snapshot on the host —
+             the blocking device->host fetch overlaps the current window's
+             in-flight compute (double-buffered shell).
+
+        Returns (state, last_metrics_stack, shell). ``on_drain(i, records)``
+        fires with i = the last step index of the drained window, matching
+        ``run``'s cadence; records additionally carry the window's stacked
+        per-step metrics under "metrics".
+        """
+        shell = self.init() if shell is None else shell
+        interval = max(1, self.cfg.sample_interval)
+        jitted, reset = self.compile_group(group_step, donate=donate)
+
+        batches = list(batches)
+        pending = None              # (last_step_idx, shell_snapshot, metrics)
+        metrics = None
+        for g0 in range(0, len(batches), interval):
+            group = batches[g0:g0 + interval]
+            stack = stack_batches(group)
+            state, snap, metrics = jitted(state, shell, stack)
+            shell = reset(snap)
+            if pending is not None:
+                self._drain_pending(pending, on_drain)
+            pending = (g0 + len(group) - 1, snap, metrics)
+        if pending is not None:
+            self._drain_pending(pending, on_drain)
+        return state, metrics, shell
+
+    @staticmethod
+    def _drain_pending(pending, on_drain):
+        i, snap, metrics = pending
+        records, _ = drain(snap)    # snapshot's reset state is discarded:
+        if on_drain is not None:    # the live shell was group_reset on device
+            records["metrics"] = {k: np.asarray(v)
+                                  for k, v in metrics.items()}
+            on_drain(i, records)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(x_ref, w_ref, o_ref, acc, *, nk: int):
     ik = pl.program_id(3)
@@ -52,7 +54,7 @@ def grouped_gemm_kernel(x, w, *, block_m: int, block_n: int, block_k: int,
                                lambda e, im, in_, ik: (e, im, in_)),
         out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

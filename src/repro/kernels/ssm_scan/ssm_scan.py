@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def _kernel(dt_ref, A_ref, B_ref, C_ref, x_ref, y_ref, h_last_ref, h_s, *,
             chunk: int, nc: int, N: int):
@@ -77,7 +79,7 @@ def ssm_scan_kernel(dt, A, B_, C_, x, *, block_d: int, chunk: int,
             jax.ShapeDtypeStruct((B, Din, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dt, A, B_, C_, x)

@@ -1,3 +1,3 @@
 from repro.train.optim import adamw_init, adamw_update, OptConfig  # noqa: F401
 from repro.train.step import (  # noqa: F401
-    make_train_step, init_state, state_specs)
+    make_train_step, make_group_step, init_state, state_specs)

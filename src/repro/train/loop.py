@@ -4,6 +4,27 @@ Wires together every substrate: data pipeline (prefetch), P-Shell
 instrumentation (drain at the gating granularity -> coverage + commit
 verification hooks), profiler phases (device/host/data attribution),
 watchdog heartbeats, async checkpointing, and restart-from-latest.
+
+Two execution engines, bit-identical by construction (tests assert it):
+
+  fused (default) — the whole clock-gated window (``sample_interval``
+      steps) is ONE jit dispatch (lax.scan over a stacked batch group, see
+      train.step.make_group_step). Losses/metrics accumulate on device and
+      cross to the host once per group; the drain of group *i* overlaps the
+      in-flight compute of group *i+1* (double-buffered shell). Checkpoint,
+      watchdog, and coverage all move to group boundaries.
+
+  per-step — one dispatch per batch, kept as the equivalence baseline.
+      Even here nothing blocks inside the "device" phase: loss arrays are
+      held on device and materialized only at drain boundaries, so the
+      profiler's device phase measures dispatch/compute, not a forced
+      host<->device sync per step.
+
+Profiler attribution under async dispatch: "device" is dispatch time (the
+enqueue), and the wait for a window's results lands in the "host" phase at
+its drain — by design, since that wait runs concurrently with the NEXT
+window's in-flight compute. A host-dominated live stack therefore means
+"host is waiting on the device", not "host work dominates".
 """
 from __future__ import annotations
 
@@ -14,11 +35,12 @@ import jax
 import numpy as np
 
 from repro.core import (PShell, default_shell_config, make_ingest,
-                        CoverageMap, Profiler, Watchdog, drain)
+                        CoverageMap, Profiler, Watchdog, drain,
+                        stack_batches)
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticPipeline
 from repro.train.optim import OptConfig
-from repro.train.step import make_train_step, init_state
+from repro.train.step import make_train_step, make_group_step, init_state
 
 
 @dataclasses.dataclass
@@ -33,6 +55,7 @@ class LoopConfig:
     watchdog_timeout_s: float = 600.0
     grad_compress: bool = False
     accum_steps: int = 1
+    fused: bool = True          # fused step groups vs per-step dispatch
 
 
 def train_loop(model, loop_cfg: LoopConfig,
@@ -40,10 +63,6 @@ def train_loop(model, loop_cfg: LoopConfig,
                on_drain: Optional[Callable[[int, dict], None]] = None,
                resume: bool = True) -> Dict[str, Any]:
     cfg = model.cfg
-    step_fn = jax.jit(make_train_step(
-        model, opt_cfg, with_aux=True,
-        grad_compress=loop_cfg.grad_compress,
-        accum_steps=loop_cfg.accum_steps))
 
     state = init_state(model, jax.random.key(loop_cfg.seed), opt_cfg,
                        grad_compress=loop_cfg.grad_compress)
@@ -56,8 +75,8 @@ def train_loop(model, loop_cfg: LoopConfig,
 
     shell_cfg = default_shell_config(
         cfg, sample_interval=loop_cfg.sample_interval)
-    shell = PShell(shell_cfg, make_ingest(cfg))
-    wrapped = shell.wrap(step_fn)
+    ingest = make_ingest(cfg)
+    shell = PShell(shell_cfg, ingest)
     sh = shell.init()
 
     prof = Profiler(sample_interval=loop_cfg.sample_interval)
@@ -65,25 +84,13 @@ def train_loop(model, loop_cfg: LoopConfig,
     cov = CoverageMap()
     pipe = SyntheticPipeline(cfg, loop_cfg.batch, loop_cfg.seq,
                              seed=loop_cfg.seed, start_step=start_step)
-    losses = []
+    losses: list = []
+
     try:
-        for i in range(start_step, loop_cfg.steps):
-            with prof.phase("data"):
-                batch = next(pipe)
-            with prof.phase("device"):
-                state, metrics, sh = wrapped(state, batch, sh)
-                loss = float(metrics["loss"])   # sync point
-            losses.append(loss)
-            wd.heartbeat()
-            with prof.phase("host"):
-                if (i + 1) % loop_cfg.sample_interval == 0:
-                    records, sh = drain(sh)
-                    cov.update(records["csrs"])
-                    if on_drain:
-                        on_drain(i, records)
-                if ckpt and (i + 1) % loop_cfg.checkpoint_every == 0:
-                    ckpt.save(state, i + 1)
-            prof.step_done()
+        runner = _run_fused if loop_cfg.fused else _run_per_step
+        state = runner(model, loop_cfg, opt_cfg, state, shell, sh, ingest,
+                       pipe, prof, wd, cov, ckpt, losses, start_step,
+                       on_drain)
     finally:
         pipe.close()
         if ckpt:
@@ -97,3 +104,111 @@ def train_loop(model, loop_cfg: LoopConfig,
         "stragglers": wd.stragglers(),
         "final_step": loop_cfg.steps,
     }
+
+
+def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
+               prof, wd, cov, ckpt, losses, start_step, on_drain):
+    """Group-granular driver: one fused dispatch per clock-gated window,
+    host drain of window i overlapped with window i+1's device compute."""
+    interval = max(1, loop_cfg.sample_interval)
+    group_fn, reset = shell.compile_group(
+        make_group_step(model, opt_cfg, ingest=ingest,
+                        grad_compress=loop_cfg.grad_compress,
+                        accum_steps=loop_cfg.accum_steps))
+
+    pending = None                  # (last_step_idx, shell_snapshot, metrics)
+
+    def drain_pending():
+        nonlocal pending
+        if pending is None:
+            return
+        i, snap, metrics = pending
+        pending = None
+        records, _ = drain(snap)
+        losses.extend(np.asarray(metrics["loss"], np.float32).tolist())
+        cov.update(records["csrs"])
+        if on_drain:
+            on_drain(i, records)
+
+    i = start_step
+    while i < loop_cfg.steps:
+        g = min(interval, loop_cfg.steps - i)
+        with prof.phase("data"):
+            stack = stack_batches([next(pipe) for _ in range(g)])
+        with prof.phase("device"):
+            state, snap, metrics = group_fn(state, sh, stack)
+            sh = reset(snap)
+        wd.heartbeat()
+        with prof.phase("host"):
+            drain_pending()         # overlaps the dispatch queued above
+            pending = (i + g - 1, snap, metrics)
+            if ckpt and _crosses_mark(i, g, loop_cfg.checkpoint_every):
+                # commit barrier: a checkpoint at step i+g may only hit disk
+                # after every window up to i+g was drained and ACCEPTED by
+                # the host (an on_drain verifier that raises must veto it) —
+                # costs this one window's drain/compute overlap, no more
+                drain_pending()
+                ckpt.save(state, i + g)
+        for _ in range(g):
+            prof.step_done()
+        i += g
+    with prof.phase("host"):
+        drain_pending()
+    return state
+
+
+def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
+                  prof, wd, cov, ckpt, losses, start_step, on_drain):
+    """Per-step dispatch baseline. Loss materialization is deferred to drain
+    boundaries — no blocking sync inside the device phase."""
+    step_fn = jax.jit(make_train_step(
+        model, opt_cfg, with_aux=True,
+        grad_compress=loop_cfg.grad_compress,
+        accum_steps=loop_cfg.accum_steps))
+
+    def wrapped(state, batch, shell_state):
+        state, metrics, aux = step_fn(state, batch)
+        return state, metrics, ingest(shell_state, aux, metrics)
+
+    wrapped = jax.jit(wrapped)
+
+    pending_losses: list = []       # device arrays, materialized at drains
+
+    def materialize():
+        losses.extend(float(x) for x in pending_losses)
+        pending_losses.clear()
+
+    def do_drain(i):
+        nonlocal sh
+        records, sh = drain(sh)
+        materialize()
+        cov.update(records["csrs"])
+        if on_drain:
+            on_drain(i, records)
+
+    since_drain = 0
+    for i in range(start_step, loop_cfg.steps):
+        with prof.phase("data"):
+            batch = next(pipe)
+        with prof.phase("device"):
+            state, metrics, sh = wrapped(state, batch, sh)
+            pending_losses.append(metrics["loss"])
+        wd.heartbeat()
+        since_drain += 1
+        with prof.phase("host"):
+            if (i + 1) % loop_cfg.sample_interval == 0:
+                do_drain(i)
+                since_drain = 0
+            if ckpt and (i + 1) % loop_cfg.checkpoint_every == 0:
+                ckpt.save(state, i + 1)
+        prof.step_done()
+    if since_drain:                 # tail window, same cadence as fused
+        do_drain(loop_cfg.steps - 1)
+    materialize()
+    return state
+
+
+def _crosses_mark(i: int, g: int, every: int) -> bool:
+    """True when any step j in window [i, i+g) has (j+1) % every == 0 —
+    checkpointing fires at the first group boundary at/after each mark."""
+    return (i + g) // every > i // every

@@ -10,6 +10,12 @@ Options:
   of the cross-pod sync; see train/compress.py). Adds an ``ef`` residual
   tree to the train state.
   accum_steps  — microbatch gradient accumulation (scan over micro-slices).
+
+``make_group_step`` fuses a whole clock-gated window (P-Shell
+``sample_interval`` steps) into one dispatch: an OUTER lax.scan over a
+stacked batch group whose body is train step + shell ingest, composing with
+the inner accum_steps scan. Per-step metrics stack on device; nothing
+crosses to the host until the group drain.
 """
 from __future__ import annotations
 
@@ -93,3 +99,39 @@ def make_train_step(model, opt_cfg: OptConfig = OptConfig(),
         return new_state, metrics
 
     return train_step
+
+
+def make_group_step(model, opt_cfg: OptConfig = OptConfig(),
+                    ingest=None, grad_compress: bool = False,
+                    accum_steps: int = 1):
+    """Fused clock-gated window: scan ``train_step`` (+ optional P-Shell
+    ``ingest``) over a stacked batch group in ONE dispatch.
+
+    Returns ``group_step(state, shell, batch_stack) -> (state, shell,
+    metrics_stack)`` where ``batch_stack`` leaves have a leading (g,) group
+    axis and ``metrics_stack`` holds every step's metrics stacked on device
+    ((g,) per scalar) — the host fetches them once per group, not once per
+    step. With ``ingest=None`` the shell (any pytree, e.g. ``{}``) passes
+    through untouched, so the same engine drives shell-less loops.
+
+    The scan body is exactly one per-step train_step, so grouped execution
+    is bit-identical to the per-step loop (asserted by tests); the inner
+    ``accum_steps`` microbatch scan composes underneath this outer scan.
+    """
+    train_step = make_train_step(model, opt_cfg, with_aux=True,
+                                 grad_compress=grad_compress,
+                                 accum_steps=accum_steps)
+
+    def group_step(state, shell, batch_stack):
+        def body(carry, batch):
+            state, shell = carry
+            state, metrics, aux = train_step(state, batch)
+            if ingest is not None:
+                shell = ingest(shell, aux, metrics)
+            return (state, shell), metrics
+
+        (state, shell), metrics_stack = jax.lax.scan(
+            body, (state, shell), batch_stack)
+        return state, shell, metrics_stack
+
+    return group_step

@@ -41,3 +41,32 @@ def fold_key(key: jax.Array, *names: str) -> jax.Array:
     for n in names:
         key = jax.random.fold_in(key, abs(hash(n)) % (2**31))
     return key
+
+
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=True,
+              axis_names=None):
+    """``jax.shard_map`` across jax versions (``jax.experimental.shard_map``
+    with ``check_rep``/``auto`` spellings before it was promoted)."""
+    if _NATIVE_SHARD_MAP is not None:
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+def axis_size(axis_name) -> jax.Array:
+    """``jax.lax.axis_size`` across jax versions (psum-of-1 spelling on
+    older jax, which lacks the named helper)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

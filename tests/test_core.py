@@ -64,6 +64,75 @@ def test_fifo_credit_accounting_property(depth, pushes):
                                   np.arange(count, dtype=np.float32))
 
 
+def test_fifo_push_many_count_capped_and_partial_overflow_exact():
+    """count never exceeds depth; a partially-overflowing push stores
+    exactly the entries that fit (in order) and counts the rest dropped."""
+    cfg = small_shell(depth=4, shape=(1,))
+    s = shell_init(cfg)
+    s = fifo_push_many(s, "f", jnp.arange(3, dtype=jnp.float32)[:, None])
+    assert int(s["fifo"]["f"]["count"]) == 3
+    # 5 more into 1 free slot: 1 stored, 4 dropped
+    s = fifo_push_many(s, "f",
+                       jnp.arange(10, 15, dtype=jnp.float32)[:, None])
+    assert int(s["fifo"]["f"]["count"]) == 4
+    assert int(s["fifo"]["f"]["dropped"]) == 4
+    rec, s = drain(s)
+    np.testing.assert_array_equal(rec["fifos"]["f"]["data"][:, 0],
+                                  [0.0, 1.0, 2.0, 10.0])
+    # push into the fully-drained FIFO: count restarts, dropped accumulates
+    s = fifo_push_many(s, "f",
+                       jnp.arange(20, 26, dtype=jnp.float32)[:, None])
+    assert int(s["fifo"]["f"]["count"]) == 4
+    assert int(s["fifo"]["f"]["dropped"]) == 4 + 2
+    rec2, _ = drain(s)
+    np.testing.assert_array_equal(rec2["fifos"]["f"]["data"][:, 0],
+                                  [20.0, 21.0, 22.0, 23.0])
+
+
+def test_fifo_drain_preserves_cumulative_dropped():
+    cfg = small_shell(depth=2, shape=(1,))
+    s = shell_init(cfg)
+    dropped = 0
+    for round_ in range(3):
+        s = fifo_push_many(s, "f", jnp.ones((5, 1), jnp.float32))
+        dropped += 3                      # 2 fit, 3 drop each round
+        rec, s = drain(s)
+        assert rec["fifos"]["f"]["count"] == 2
+        assert rec["fifos"]["f"]["dropped"] == dropped
+    rec, _ = drain(s)
+    assert rec["fifos"]["f"]["count"] == 0         # drain resets occupancy
+    assert rec["fifos"]["f"]["dropped"] == dropped  # counter survives
+
+
+def test_grouped_ingest_undersized_fifo_drops_deterministically():
+    """A fused group pushing into an undersized FIFO drops the SAME entries
+    with the SAME credit accounting on every identical run (never blocks,
+    never races)."""
+    cfg = small_shell(depth=5, shape=(2,))
+
+    @jax.jit
+    def group(s, stacks):
+        def body(s, payload):
+            return fifo_push_many(s, "f", payload), None
+        s, _ = jax.lax.scan(body, s, stacks)
+        return s
+
+    stacks = jnp.arange(4 * 3 * 2, dtype=jnp.float32).reshape(4, 3, 2)
+    out = []
+    for _ in range(2):
+        rec, _ = drain(group(shell_init(cfg), stacks))
+        out.append(rec)
+    for rec in out:
+        f = rec["fifos"]["f"]
+        assert f["count"] == 5                 # capped at depth
+        assert f["dropped"] == 4 * 3 - 5       # exact credit accounting
+        # the stored prefix is the first 5 pushes in scan order
+        np.testing.assert_array_equal(
+            f["data"], stacks.reshape(-1, 2)[:5])
+    np.testing.assert_array_equal(out[0]["fifos"]["f"]["data"],
+                                  out[1]["fifos"]["f"]["data"])
+
+
 def test_fifo_push_many_under_jit():
     cfg = small_shell(depth=4, shape=(3,))
 

@@ -1,0 +1,213 @@
+"""Fused step-group engine tests: the clock-gated window compiled into one
+dispatch must be OBSERVATIONALLY INDISTINGUISHABLE from per-step execution —
+bit-identical model/opt state, bit-identical drained commit records, exact
+fault localization under group-locked co-emulation. These are the paper's
+non-interference invariants extended to the fused hot path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import PShell, default_shell_config, make_ingest, CoEmulator
+from repro.core.coemu import inject_fault
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.train import make_train_step, make_group_step, init_state
+from repro.train.loop import LoopConfig, train_loop
+
+jax.config.update("jax_platform_name", "cpu")
+
+TAPS = frozenset({"commits", "coverage"})
+
+
+def _batches(cfg, n, batch=2, seq=16):
+    out = []
+    for i in range(n):
+        out.append({
+            "tokens": np.asarray(jax.random.randint(
+                jax.random.key(i), (batch, seq), 0, cfg.vocab_size)),
+            "labels": np.asarray(jax.random.randint(
+                jax.random.key(i + 99), (batch, seq), 0, cfg.vocab_size)),
+        })
+    return out
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_records_equal(recs_a, recs_b):
+    assert len(recs_a) == len(recs_b)
+    for (ia, ra), (ib, rb) in zip(recs_a, recs_b):
+        assert ia == ib                       # same drain cadence
+        assert set(ra["fifos"]) == set(rb["fifos"])
+        for name in ra["fifos"]:
+            fa, fb = ra["fifos"][name], rb["fifos"][name]
+            assert fa["count"] == fb["count"]
+            assert fa["dropped"] == fb["dropped"]
+            np.testing.assert_array_equal(fa["data"], fb["data"])
+        assert set(ra["csrs"]) == set(rb["csrs"])
+        for name in ra["csrs"]:
+            np.testing.assert_array_equal(ra["csrs"][name],
+                                          rb["csrs"][name])
+
+
+# ------------------------------------------------------ engine equivalence --
+@pytest.mark.parametrize("interval", [1, 4, 8])
+def test_grouped_bitwise_equals_per_step(interval):
+    """For sample_interval in {1, 4, 8}: final model/opt state AND every
+    drained commit record of the fused engine match the per-step loop
+    exactly (the acceptance bit-identity contract)."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=TAPS))
+    batches = _batches(cfg, 8)
+    ingest = make_ingest(cfg)
+    shell = PShell(default_shell_config(cfg, sample_interval=interval),
+                   ingest)
+
+    step = jax.jit(make_train_step(model, with_aux=True))
+    recs_ps, recs_g = [], []
+    s_ps, _, _ = shell.run(
+        shell.wrap(step), init_state(model, jax.random.key(0)),
+        [{k: jnp.asarray(v) for k, v in b.items()} for b in batches],
+        on_drain=lambda i, r: recs_ps.append((i, r)))
+
+    group_step = make_group_step(model, ingest=ingest)
+    s_g, metrics, _ = shell.run_grouped(
+        group_step, init_state(model, jax.random.key(0)), batches,
+        on_drain=lambda i, r: recs_g.append((i, r)))
+
+    _assert_trees_bitwise(s_ps, s_g)
+    _assert_records_equal(recs_ps, recs_g)
+    # metrics accumulate on device, one stack per window
+    assert metrics["loss"].shape == (min(interval, 8),)
+
+
+def test_grouped_composes_with_accum_steps():
+    """The outer group scan composes with the inner microbatch-accumulation
+    scan: grouped(accum=2) == per-step(accum=2) bitwise."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=TAPS))
+    batches = _batches(cfg, 4, batch=4)
+    ingest = make_ingest(cfg)
+    shell = PShell(default_shell_config(cfg, sample_interval=2), ingest)
+
+    step = jax.jit(make_train_step(model, with_aux=True, accum_steps=2))
+    s_ps, _, _ = shell.run(
+        shell.wrap(step), init_state(model, jax.random.key(0)),
+        [{k: jnp.asarray(v) for k, v in b.items()} for b in batches])
+
+    group_step = make_group_step(model, ingest=ingest, accum_steps=2)
+    s_g, _, _ = shell.run_grouped(
+        group_step, init_state(model, jax.random.key(0)), batches)
+    _assert_trees_bitwise(s_ps, s_g)
+
+
+def test_group_step_without_shell():
+    """make_group_step with ingest=None drives shell-less loops: the shell
+    pytree passes through untouched."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=TAPS))
+    batches = _batches(cfg, 3)
+    stack = jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                         *batches)
+    group_step = jax.jit(make_group_step(model))
+    state, shell, metrics = group_step(
+        init_state(model, jax.random.key(0)), {}, stack)
+    assert shell == {}
+    assert metrics["loss"].shape == (3,)
+
+    sstep = jax.jit(make_train_step(model, with_aux=True))
+    s = init_state(model, jax.random.key(0))
+    for b in batches:
+        s, m, _ = sstep(s, {k: jnp.asarray(v) for k, v in b.items()})
+    _assert_trees_bitwise(s, state)
+
+
+# ------------------------------------------------------------ train driver --
+def test_train_loop_fused_equals_per_step():
+    cfg = get_smoke_config("granite-8b")
+
+    def model():
+        return build_model(cfg, Runtime(taps=TAPS))
+
+    lc = dict(steps=6, batch=2, seq=16, sample_interval=3)
+    fused = train_loop(model(), LoopConfig(fused=True, **lc), resume=False)
+    plain = train_loop(model(), LoopConfig(fused=False, **lc), resume=False)
+    assert fused["losses"] == plain["losses"]
+    _assert_trees_bitwise(fused["state"], plain["state"])
+    assert fused["coverage"]["fraction"] == plain["coverage"]["fraction"]
+
+
+def test_train_loop_fused_tail_group():
+    """steps not divisible by the interval: the tail window is a smaller
+    group, every step is still executed and drained exactly once, and both
+    engines agree on the drain cadence and results."""
+    cfg = get_smoke_config("granite-8b")
+
+    def model():
+        return build_model(cfg, Runtime(taps=TAPS))
+
+    lc = dict(steps=7, batch=2, seq=16, sample_interval=4)
+    drains_f, drains_p = [], []
+    fused = train_loop(model(), LoopConfig(fused=True, **lc),
+                       on_drain=lambda i, r: drains_f.append(i),
+                       resume=False)
+    plain = train_loop(model(), LoopConfig(fused=False, **lc),
+                       on_drain=lambda i, r: drains_p.append(i),
+                       resume=False)
+    assert len(fused["losses"]) == 7
+    assert drains_f == drains_p == [3, 6]
+    assert fused["losses"] == plain["losses"]
+    _assert_trees_bitwise(fused["state"], plain["state"])
+    assert fused["coverage"]["fraction"] == plain["coverage"]["fraction"]
+
+
+# ------------------------------------------------------------ co-emulation --
+@pytest.mark.parametrize("fault_layer", [0, 1])
+def test_coemu_group_locked_localizes_fault(fault_layer):
+    """Group-locked verify (one dispatch per window per side) localizes an
+    injected fault to the exact (step, layer) — identical to step-locked."""
+    cfg = get_smoke_config("glm4-9b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    step = jax.jit(make_train_step(model, with_aux=True))
+    state = init_state(model, jax.random.key(1))
+    state_bad = {**state,
+                 "params": inject_fault(state["params"], cfg, fault_layer)}
+    batches = [{"tokens": jax.random.randint(jax.random.key(i), (2, 16), 0,
+                                             cfg.vocab_size),
+                "labels": jax.random.randint(jax.random.key(i + 9), (2, 16),
+                                             0, cfg.vocab_size)}
+               for i in range(4)]
+    emu = CoEmulator(step, step, rtol=5e-2)
+    rep_s = emu.verify(state_bad, state, batches)
+    rep_g = emu.verify(state_bad, state, batches, group_size=4)
+    assert rep_s.diverged and rep_g.diverged
+    assert (rep_g.first.step, rep_g.first.layer) == \
+        (rep_s.first.step, rep_s.first.layer) == (0, fault_layer)
+    assert rep_g.steps == rep_s.steps == 4
+
+
+def test_coemu_group_locked_matches_step_locked_clean():
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    step = jax.jit(make_train_step(model, with_aux=True))
+    state = init_state(model, jax.random.key(2))
+    batches = _batches(cfg, 4)
+    batches = [{k: jnp.asarray(v) for k, v in b.items()} for b in batches]
+    emu = CoEmulator(step, step, rtol=1e-6)
+    rep_s = emu.verify(state, state, batches)
+    rep_g = emu.verify(state, state, batches, group_size=2)
+    assert not rep_s.diverged and not rep_g.diverged
+    assert rep_g.steps == 4
+
+
+def test_inject_fault_raises_without_stacked_leaf():
+    cfg = get_smoke_config("granite-8b")
+    params = {"stack": {"blocks": ({"w": jnp.ones((4, 4))},)}}
+    with pytest.raises(ValueError, match="ndim >= 3"):
+        inject_fault(params, cfg, 0)
