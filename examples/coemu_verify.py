@@ -2,8 +2,9 @@
 against the f32 golden model through the commit stream, then inject a fault
 and watch the verifier localize it to the exact layer.
 
-  PYTHONPATH=src python examples/coemu_verify.py
+  PYTHONPATH=src python examples/coemu_verify.py [--steps 4]
 """
+import argparse
 import dataclasses
 
 import jax
@@ -18,6 +19,10 @@ from repro.train import make_train_step, init_state
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=4,
+                    help="verification step budget (CI smoke uses 2)")
+    args = ap.parse_args()
     cfg = get_smoke_config("glm4-9b")
     taps = frozenset({"commits"})
     dut_model = build_model(cfg, Runtime(taps=taps, remat="dots"))
@@ -29,18 +34,26 @@ def main():
     s_orc = init_state(orc_model, jax.random.key(0))
     batchf = make_batch_fn(cfg, 2, 32)
     batches = [{k: jax.numpy.asarray(v) for k, v in batchf(i).items()}
-               for i in range(4)]
+               for i in range(args.steps)]
 
     emu = CoEmulator(dut, orc, rtol=0.3)
     print("clean run:", emu.verify(s_dut, s_orc, batches).summary())
+    if len(batches) > 1:
+        rep = emu.verify(s_dut, s_orc, batches,
+                         group_size=max(2, len(batches) // 2))
+        print("group-locked (scheduler-overlapped):", rep.summary())
     print("determinism:",
           CoEmulator.determinism(dut, s_dut, batches[0]))
 
+    # fault localization: verify the faulted DUT against the CLEAN DUT so
+    # the commit stream carries pure fault signal (the bf16-vs-f32 oracle
+    # gap sits near rtol and would blur the margin)
+    emu_fault = CoEmulator(dut, dut, rtol=5e-2)
     for layer in (0, 1):
         s_bad = {**s_dut, "params": inject_fault(s_dut["params"], cfg, layer)}
-        rep = emu.verify(s_bad, s_orc, batches[:1])
+        rep = emu_fault.verify(s_bad, s_dut, batches[:1])
         print(f"fault@layer{layer}:", rep.summary())
-        assert rep.first.layer == layer
+        assert rep.diverged and rep.first.layer == layer
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Quickstart: build an architecture, train a few steps with the full
-P-Shell co-emulation stack, inspect commits/coverage, generate tokens.
+P-Shell co-emulation stack (fused clock-gated windows through the core
+WindowScheduler), inspect commits/coverage, generate tokens.
 
   PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
 """
@@ -9,12 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import (PShell, default_shell_config, make_ingest, drain,
+from repro.core import (PShell, default_shell_config, make_ingest,
                         CoverageMap)
 from repro.data import SyntheticPipeline
 from repro.models import build_model
 from repro.models.runtime import Runtime
-from repro.train import make_train_step, init_state
+from repro.train import make_train_step, make_group_step, init_state
 from repro.serve import make_prefill_step, make_serve_step
 
 
@@ -31,24 +32,28 @@ def main():
     print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
           f"params={sum(x.size for x in jax.tree.leaves(jax.eval_shape(model.init, jax.random.key(0))))/1e6:.1f}M")
 
-    # 2. train with the shell wrapped around the step (DESIGN C2/C3)
+    # 2. train through the core WindowScheduler: each clock-gated window
+    # (sample_interval steps) is ONE fused dispatch, and the host drain of
+    # window i overlaps window i+1's in-flight compute (DESIGN C2/C3)
     state = init_state(model, jax.random.key(0))
-    step = jax.jit(make_train_step(model))
-    shell = PShell(default_shell_config(cfg), make_ingest(cfg))
-    wrapped = shell.wrap(step)
-    sh = shell.init()
+    ingest = make_ingest(cfg)
+    shell = PShell(default_shell_config(cfg, sample_interval=2), ingest)
     cov = CoverageMap()
     pipe = SyntheticPipeline(cfg, batch=4, seq=32)
+
+    def on_drain(i, rec):
+        cov.update(rec["csrs"])
+        commits = rec["fifos"]["commits"]
+        losses = rec["metrics"]["loss"]
+        print(f"window ..{i}: loss={float(losses[-1]):.3f} "
+              f"commits={commits['count']} dropped={commits['dropped']} "
+              f"coverage={cov.fraction():.2f}")
+
     try:
-        for i in range(args.steps):
-            batch = next(pipe)
-            state, metrics, sh = wrapped(state, batch, sh)
-            rec, sh = drain(sh)
-            cov.update(rec["csrs"])
-            commits = rec["fifos"]["commits"]
-            print(f"step {i}: loss={float(metrics['loss']):.3f} "
-                  f"commits={commits['count']} dropped={commits['dropped']} "
-                  f"coverage={cov.fraction():.2f}")
+        batches = [next(pipe) for _ in range(args.steps)]
+        state, _, _ = shell.run_grouped(
+            make_group_step(model, ingest=ingest), state, batches,
+            on_drain=on_drain)
     finally:
         pipe.close()
 

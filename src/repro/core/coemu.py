@@ -14,17 +14,30 @@ carry every step's checksums — so host crossings amortize over the window
 while localization stays exact: the per-step commit streams are recovered
 from the scanned aux and compared step by step, bit-for-bit equivalent to
 step-locked verification.
+
+Both modes now run through the core ``WindowScheduler``: DUT and oracle
+windows are dispatched back-to-back (async) before EITHER side's checksums
+are fetched, and with ``overlap=True`` (default) window *i*'s blocking
+fetch + comparison runs while window *i+1*'s compute is already in flight —
+the oracle no longer serializes behind the DUT drain, and grouped verify
+stops paying two serial syncs per window (``overlap=False`` reproduces the
+serial baseline for benchmarking).
+
+``verify_subsystems`` is the multi-DUT (ZP-Farm) mode: several
+``decompose.extract_block`` subsystems verify as independent engines
+sharing ONE scheduler pass against boundary traffic captured in situ.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.commit import layer_checksums
+from repro.core.schedule import WindowScheduler, iter_windows
 
 
 @dataclasses.dataclass
@@ -54,6 +67,54 @@ def _rel_err(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.abs(a - b) / (np.abs(b) + 1e-6)
 
 
+def _stack_on_device(items):
+    """Device-side window stacking (the DUT/oracle dispatch consumes jnp
+    stacks; no host round-trip for already-resident batches)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *items)
+
+
+class _CompareAccumulator:
+    """Folds one window's (dut, oracle) checksum/loss ys at a time into the
+    running CoEmuReport fields. The np.asarray calls here are the blocking
+    device->host fetches — the scheduler runs them overlapped with the next
+    window's in-flight compute."""
+
+    def __init__(self, rtol: float):
+        self.rtol = rtol
+        self.first: Optional[Divergence] = None
+        self.max_err = 0.0
+        self.loss_diff = 0.0
+        self.steps = 0
+
+    def ingest(self, step0: int, ys):
+        (cks_d, loss_d), (cks_o, loss_o) = ys
+        cks_d = np.asarray(cks_d, np.float64)             # (g, L, 2)
+        cks_o = np.asarray(cks_o, np.float64)
+        self._compare(cks_d, cks_o, step0)
+        self.loss_diff = max(self.loss_diff, float(np.max(np.abs(
+            np.asarray(loss_d, np.float64)
+            - np.asarray(loss_o, np.float64)))))
+        self.steps += cks_d.shape[0]
+
+    def _compare(self, cks_d, cks_o, step0):
+        """Per-step (g, L, 2) checksum comparison; records the first
+        divergent (step, layer) in window order."""
+        err = _rel_err(cks_d, cks_o).max(axis=2)          # (g, L)
+        self.max_err = max(self.max_err, float(err.max()))
+        if self.first is None:
+            bad_steps, bad_layers = np.nonzero(err > self.rtol)
+            if bad_steps.size:
+                s, l = int(bad_steps[0]), int(bad_layers[0])
+                self.first = Divergence(step=step0 + s, layer=l,
+                                        rel_err=float(err[s, l]))
+
+    def report(self) -> CoEmuReport:
+        return CoEmuReport(steps=self.steps,
+                           diverged=self.first is not None,
+                           first=self.first, max_rel_err=self.max_err,
+                           loss_max_abs_diff=self.loss_diff)
+
+
 class CoEmulator:
     """verify(): DUT-vs-oracle commit comparison. determinism(): DUT-vs-DUT
     bitwise reproducibility (run-to-run, the emulation-debug contract)."""
@@ -63,37 +124,75 @@ class CoEmulator:
         self.dut_step = dut_step
         self.oracle_step = oracle_step
         self.rtol = rtol
-        self._group_fns: Dict[int, Callable] = {}  # id(step) -> jitted group
+        # keyed on the step function OBJECT (kept alive by the key), never
+        # id(): id keys are only sound while every cached fn happens to
+        # stay alive; object keys make no-aliasing unconditional
+        self._group_fns: Dict[Any, Callable] = {}
 
-    def verify(self, state_dut, state_orc, batches,
-               group_size: int = 1) -> CoEmuReport:
+    def verify(self, state_dut, state_orc, batches, group_size: int = 1,
+               overlap: bool = True) -> CoEmuReport:
         """Cross-verify commit streams. ``group_size=1`` is the step-locked
         Dromajo loop; ``group_size=N`` dispatches each side once per
         N-step window (scan-fused) and recovers per-step checksums from the
         scanned ys — same localization, 2 dispatches per window instead of
-        2N."""
-        if group_size > 1:
-            return self._verify_grouped(state_dut, state_orc,
-                                        list(batches), group_size)
-        first = None
-        max_err = 0.0
-        loss_diff = 0.0
-        steps = 0
-        for i, batch in enumerate(batches):
-            state_dut, m_dut, aux_dut = self.dut_step(state_dut, batch)
-            state_orc, m_orc, aux_orc = self.oracle_step(state_orc, batch)
-            cks_d = np.asarray(layer_checksums(aux_dut), np.float64)
-            cks_o = np.asarray(layer_checksums(aux_orc), np.float64)
-            first, max_err = self._compare(cks_d[None], cks_o[None], i,
-                                           first, max_err)
-            loss_diff = max(loss_diff, float(abs(
-                np.float64(m_dut["loss"]) - np.float64(m_orc["loss"]))))
-            steps += 1
-        return CoEmuReport(steps=steps, diverged=first is not None,
-                           first=first, max_rel_err=max_err,
-                           loss_max_abs_diff=loss_diff)
+        2N. ``overlap=False`` forces the serial baseline: each window's
+        checksums are fetched before the next window dispatches, and in
+        grouped mode the DUT window is additionally synced to completion
+        before the oracle window dispatches (the 2-serial-syncs Dromajo
+        loop). Step-locked mode always dispatches DUT and oracle
+        back-to-back within a step."""
+        grouped = group_size > 1
+        engine = (self._grouped_engine(serial=not overlap) if grouped
+                  else self._step_engine())
+        sched = WindowScheduler(
+            interval=max(1, group_size), overlap=overlap, drain_fn=None,
+            stack_fn=_stack_on_device if grouped else None)
+        acc = _CompareAccumulator(self.rtol)
+        sched.run(engine, sched.windows(batches),
+                  (state_dut, state_orc), {},
+                  on_drain=lambda plan, records, ys: acc.ingest(plan.start,
+                                                                ys))
+        return acc.report()
 
-    # ------------------------------------------------------- group-locked --
+    # ------------------------------------------------------------ engines --
+    def _step_engine(self):
+        """Step-locked two-sided engine: per-step dispatches exactly as the
+        legacy Dromajo loop, but checksum materialization is deferred to
+        the scheduler's drain (ys stay on device)."""
+        def engine(states, shell, batches):
+            state_dut, state_orc = states
+            cks_d, cks_o, loss_d, loss_o = [], [], [], []
+            for batch in batches:
+                state_dut, m_dut, aux_dut = self.dut_step(state_dut, batch)
+                state_orc, m_orc, aux_orc = self.oracle_step(state_orc, batch)
+                cks_d.append(layer_checksums(aux_dut))
+                cks_o.append(layer_checksums(aux_orc))
+                loss_d.append(m_dut["loss"])
+                loss_o.append(m_orc["loss"])
+            ys = ((jnp.stack(cks_d), jnp.stack(loss_d)),
+                  (jnp.stack(cks_o), jnp.stack(loss_o)))
+            return (state_dut, state_orc), shell, ys
+
+        return engine
+
+    def _grouped_engine(self, serial: bool = False):
+        """Group-locked two-sided engine: DUT and oracle windows dispatch
+        back-to-back (async); nothing is fetched here. ``serial=True`` is
+        the benchmark's no-dispatch-overlap baseline: the DUT window is
+        synced to completion before the oracle window dispatches."""
+        dut_group = self._cached_group(self.dut_step)
+        orc_group = self._cached_group(self.oracle_step)
+
+        def engine(states, shell, stack):
+            state_dut, state_orc = states
+            state_dut, ys_d = dut_group(state_dut, stack)
+            if serial:
+                jax.block_until_ready(ys_d)
+            state_orc, ys_o = orc_group(state_orc, stack)
+            return (state_dut, state_orc), shell, (ys_d, ys_o)
+
+        return engine
+
     def _group_fn(self, step: Callable):
         """One fused dispatch per window: scan ``step`` over the batch
         stack, ys = (per-step checksums, per-step loss)."""
@@ -105,48 +204,9 @@ class CoEmulator:
         return jax.jit(lambda state, stack: jax.lax.scan(body, state, stack))
 
     def _cached_group(self, step: Callable):
-        key = id(step)
-        if key not in self._group_fns:
-            self._group_fns[key] = self._group_fn(step)
-        return self._group_fns[key]
-
-    def _verify_grouped(self, state_dut, state_orc, batches,
-                        group_size: int) -> CoEmuReport:
-        dut_group = self._cached_group(self.dut_step)
-        orc_group = self._cached_group(self.oracle_step)
-
-        first = None
-        max_err = 0.0
-        loss_diff = 0.0
-        steps = 0
-        for g0 in range(0, len(batches), group_size):
-            window = batches[g0:g0 + group_size]
-            stack = jax.tree.map(lambda *xs: jnp.stack(xs), *window)
-            state_dut, (cks_d, loss_d) = dut_group(state_dut, stack)
-            state_orc, (cks_o, loss_o) = orc_group(state_orc, stack)
-            cks_d = np.asarray(cks_d, np.float64)         # (g, L, 2)
-            cks_o = np.asarray(cks_o, np.float64)
-            first, max_err = self._compare(cks_d, cks_o, g0, first, max_err)
-            loss_diff = max(loss_diff, float(np.max(np.abs(
-                np.asarray(loss_d, np.float64)
-                - np.asarray(loss_o, np.float64)))))
-            steps += len(window)
-        return CoEmuReport(steps=steps, diverged=first is not None,
-                           first=first, max_rel_err=max_err,
-                           loss_max_abs_diff=loss_diff)
-
-    def _compare(self, cks_d, cks_o, step0, first, max_err):
-        """Per-step (g, L, 2) checksum comparison; records the first
-        divergent (step, layer) in window order."""
-        err = _rel_err(cks_d, cks_o).max(axis=2)          # (g, L)
-        max_err = max(max_err, float(err.max()))
-        if first is None:
-            bad_steps, bad_layers = np.nonzero(err > self.rtol)
-            if bad_steps.size:
-                s, l = int(bad_steps[0]), int(bad_layers[0])
-                first = Divergence(step=step0 + s, layer=l,
-                                   rel_err=float(err[s, l]))
-        return first, max_err
+        if step not in self._group_fns:
+            self._group_fns[step] = self._group_fn(step)
+        return self._group_fns[step]
 
     @staticmethod
     def determinism(step: Callable, state, batch) -> bool:
@@ -159,6 +219,92 @@ class CoEmulator:
         return all(np.array_equal(np.asarray(a), np.asarray(b),
                                   equal_nan=True)
                    for a, b in zip(leaves1, leaves2))
+
+
+# ------------------------------------------------------------- multi-DUT ---
+def _activation_checksum(x):
+    """(abs-mean, rms) — both O(activation-scale) positive statistics, so
+    the relative comparison is stable (a raw mean sits near zero for
+    normalized activations and would amplify low-bit compile jitter)."""
+    x = x.astype(jnp.float32)
+    return jnp.stack([jnp.mean(jnp.abs(x)),
+                      jnp.sqrt(jnp.mean(jnp.square(x)))])
+
+
+def verify_subsystems(params, cfg, rt, xs: Sequence, positions,
+                      layer_idxs: Sequence[int], group_size: int = 2,
+                      rtol: float = 5e-2,
+                      dut_params=None) -> Dict[str, CoEmuReport]:
+    """Multi-DUT (ZP-Farm) mode: verify several extracted subsystems as
+    independent engines sharing ONE scheduler pass.
+
+    For each activation batch in ``xs`` (the "steps"), an in-situ unrolled
+    run over ``params`` captures every block's boundary traffic (the
+    oracle). Each layer in ``layer_idxs`` then becomes one DUT engine — the
+    ``extract_block`` subsystem (from ``dut_params``, defaulting to the
+    oracle's params) replayed standalone over its captured inputs,
+    scan-fused per window — and all engines advance window-by-window
+    through one ``WindowScheduler.run_many`` pass: every board dispatches
+    before any board's previous window is fetched. A divergence localizes a
+    fault to the exact (step, subsystem).
+
+    Note on tolerance: the scan-compiled replay may differ from the eager
+    in-situ capture in low mantissa bits (XLA fusion/reassociation,
+    especially bf16), so comparison is at ``rtol`` — the BITWISE
+    non-interference contract is the eager ``decompose.verify_extraction``
+    path."""
+    from repro.core.decompose import extract_block, unrolled_capture
+
+    captures = [unrolled_capture(params, cfg, x, positions, rt)[1]
+                for x in xs]                       # [step][layer] records
+    batch, seq = xs[0].shape[0], xs[0].shape[1]
+
+    clients = []
+    oracle_cks = []                                # per client: (steps, 2)
+    for li in layer_idxs:
+        sub = extract_block(dut_params if dut_params is not None else params,
+                            cfg, li, rt, batch, seq)
+
+        def make_engine(fn):
+            def window_fn(stack):
+                return jax.lax.map(
+                    lambda x: _activation_checksum(fn(x, positions)), stack)
+            jitted = jax.jit(window_fn)
+
+            def engine(state, shell, stack):
+                return state, shell, jitted(stack)
+
+            return engine
+
+        x_ins = [captures[s][li]["x_in"] for s in range(len(xs))]
+        clients.append((make_engine(sub.fn),
+                        iter_windows(x_ins, group_size), None, {}))
+        oracle_cks.append(np.stack([
+            np.asarray(_activation_checksum(captures[s][li]["x_out"]),
+                       np.float64)
+            for s in range(len(xs))]))
+
+    accs = [_CompareAccumulator(rtol) for _ in layer_idxs]
+
+    def on_drain(k, plan, records, ys):
+        cks_d = np.asarray(ys, np.float64)[:, None, :]   # (g, 1, 2)
+        cks_o = oracle_cks[k][plan.start:plan.start + plan.size][:, None, :]
+        accs[k]._compare(cks_d, cks_o, plan.start)
+        accs[k].steps += cks_d.shape[0]
+
+    sched = WindowScheduler(interval=max(1, group_size), overlap=True,
+                            drain_fn=None, stack_fn=_stack_on_device)
+    sched.run_many(clients, on_drain=on_drain)
+
+    out = {}
+    for k, li in enumerate(layer_idxs):
+        rep = accs[k].report()
+        if rep.first is not None:
+            # the engine sees a single "layer" (itself); report the true id
+            rep.first = Divergence(step=rep.first.step, layer=li,
+                                   rel_err=rep.first.rel_err)
+        out[f"layer{li}"] = rep
+    return out
 
 
 def inject_fault(params, cfg, layer: int, scale: float = 100.0):

@@ -7,6 +7,10 @@ behind a preserved interface behaves exactly as in situ ("strict
 non-interference of the DUT"). The roofline composer (repro.roofline.compose)
 uses the same decomposition to extrapolate full-system cost from per-block
 dry-runs — the Scale-Up/Scale-Down cycle of Fig. 1.
+
+``coemu.verify_subsystems`` drives several extracted blocks as independent
+DUT engines through one ``WindowScheduler.run_many`` pass against the
+captured boundary traffic — the multi-board ZP-Farm shape.
 """
 from __future__ import annotations
 

@@ -215,52 +215,79 @@ class PShell:
 
         return wrapped
 
+    def scheduler(self, overlap: bool = True, timer=None,
+                  stacked: bool = True):
+        """The core WindowScheduler configured for this shell: P-Shell
+        drain, device-side ``group_reset`` double-buffering when
+        overlapping, windows of ``sample_interval`` steps.
+        ``stacked=False`` hands engines the raw per-step batch list
+        (per-step engines — no window-stacking copy)."""
+        from repro.core.schedule import WindowScheduler
+        return WindowScheduler(
+            interval=max(1, self.cfg.sample_interval), overlap=overlap,
+            reset=_reset_jitted() if overlap else None, drain_fn=drain,
+            stack_fn=stack_batches if stacked else None, timer=timer)
+
     def run(self, wrapped_step, state, batches, shell=None,
             on_drain: Optional[Callable[[int, dict], None]] = None):
-        """Host (VPS) loop: dispatch steps, drain every sample_interval.
-        ``batches`` is an iterable; returns (state, last_metrics, shell)."""
+        """Per-step host (VPS) baseline: one dispatch per step, serial
+        drain every ``sample_interval`` steps (tail window included), all
+        through the core WindowScheduler. ``batches`` is an iterable;
+        returns (state, last_metrics, shell)."""
         shell = self.init() if shell is None else shell
-        interval = max(1, self.cfg.sample_interval)
-        metrics = None
-        for i, batch in enumerate(batches):
-            state, metrics, shell = wrapped_step(state, batch, shell)
-            if (i + 1) % interval == 0:
-                records, shell = drain(shell)
-                if on_drain is not None:
-                    on_drain(i, records)
-        return state, metrics, shell
+        sched = self.scheduler(overlap=False, stacked=False)
+
+        def engine(state, sh, batches):
+            metrics = None
+            for batch in batches:
+                state, metrics, sh = wrapped_step(state, batch, sh)
+            return state, sh, metrics
+
+        def emit(plan, records, ys):
+            if on_drain is not None:
+                on_drain(plan.last, records)
+
+        return sched.run(engine, sched.windows(batches), state, shell,
+                         on_drain=emit)
 
     def compile_group(self, group_step, donate: Optional[bool] = None):
         """Jit a group_step for fused dispatch, caching per (fn, donation).
-        Returns (jitted_group, jitted_reset). ``donate=None`` donates
+        Returns the jitted group fn (the scheduler owns the device-side
+        ``group_reset`` double-buffering). ``donate=None`` donates
         model/opt state (argnum 0) wherever donation is real — it is a
         no-op warning on CPU backends. Callers that redispatch from the
         SAME state object (benchmark timing loops) must pass donate=False
-        so the input buffers survive."""
+        so the input buffers survive.
+
+        The cache is keyed on the function OBJECT (kept alive by the key),
+        never on ``id()``: id keys are only sound while every cached fn
+        happens to stay alive, and a recycled id would silently hand a
+        different step fn a stale compiled group."""
         if donate is None:
             donate = jax.default_backend() != "cpu"
-        key = (id(group_step), donate)
+        key = (group_step, donate)
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(
                 group_step, donate_argnums=(0,) if donate else ())
-        return self._jit_cache[key], _reset_jitted()
+        return self._jit_cache[key]
 
     def run_grouped(self, group_step, state, batches, shell=None,
                     on_drain: Optional[Callable[[int, dict], None]] = None,
                     donate: Optional[bool] = None):
-        """Fused host loop: ONE jit dispatch per clock-gated window.
+        """Fused host loop: ONE jit dispatch per clock-gated window,
+        scheduled by the core WindowScheduler in overlap mode.
 
         ``group_step(state, shell, batch_stack) -> (state, shell,
         metrics_stack)`` runs ``sample_interval`` steps as a lax.scan (see
-        train.step.make_group_step). Per window this loop:
+        train.step.make_group_step). Per window the scheduler:
 
           1. stacks the window's batches and dispatches the fused group
              (async) — model/opt state donated so buffers reuse in place;
           2. derives the next group's shell via ``group_reset`` (device
-             side, async) and immediately dispatches nothing else on it;
+             side, async) — the double buffer;
           3. only THEN drains the PREVIOUS window's snapshot on the host —
              the blocking device->host fetch overlaps the current window's
-             in-flight compute (double-buffered shell).
+             in-flight compute.
 
         Returns (state, last_metrics_stack, shell). ``on_drain(i, records)``
         fires with i = the last step index of the drained window, matching
@@ -268,29 +295,14 @@ class PShell:
         per-step metrics under "metrics".
         """
         shell = self.init() if shell is None else shell
-        interval = max(1, self.cfg.sample_interval)
-        jitted, reset = self.compile_group(group_step, donate=donate)
+        jitted = self.compile_group(group_step, donate=donate)
+        sched = self.scheduler(overlap=True)
 
-        batches = list(batches)
-        pending = None              # (last_step_idx, shell_snapshot, metrics)
-        metrics = None
-        for g0 in range(0, len(batches), interval):
-            group = batches[g0:g0 + interval]
-            stack = stack_batches(group)
-            state, snap, metrics = jitted(state, shell, stack)
-            shell = reset(snap)
-            if pending is not None:
-                self._drain_pending(pending, on_drain)
-            pending = (g0 + len(group) - 1, snap, metrics)
-        if pending is not None:
-            self._drain_pending(pending, on_drain)
-        return state, metrics, shell
+        def emit(plan, records, metrics):
+            if on_drain is not None:
+                records["metrics"] = {k: np.asarray(v)
+                                      for k, v in metrics.items()}
+                on_drain(plan.last, records)
 
-    @staticmethod
-    def _drain_pending(pending, on_drain):
-        i, snap, metrics = pending
-        records, _ = drain(snap)    # snapshot's reset state is discarded:
-        if on_drain is not None:    # the live shell was group_reset on device
-            records["metrics"] = {k: np.asarray(v)
-                                  for k, v in metrics.items()}
-            on_drain(i, records)
+        return sched.run(jitted, sched.windows(batches), state, shell,
+                         on_drain=emit)

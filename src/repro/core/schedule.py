@@ -1,0 +1,315 @@
+"""The core window scheduler: ONE host loop for every P-Shell client.
+
+The paper's P-Shell is a single host<->DUT interface that serves every use
+— functional verification, performance validation, long-workload execution.
+Before this module the repo had four divergent copies of the windowing /
+double-buffer / drain-overlap machinery (``PShell.run``/``run_grouped``,
+the two ``train.loop`` engines, ``CoEmulator.verify``). The scheduler — not
+each caller — now owns window pipelining (the FireSim lesson: keep the
+device busy while the host lags; the FASE lesson: overlap host work with
+in-flight target execution):
+
+  * batch stacking — each window's per-step items are stacked into one
+    contiguous (g, ...) payload per leaf, one upload per window;
+  * one dispatch per clock-gated window — the *engine* is any
+    ``(state, shell, batch_stack) -> (state, shell_snapshot, ys)``
+    callable, typically a jit-compiled lax.scan over the stack with the
+    model/opt state donated;
+  * double-buffered shell + overlapped drain — in ``overlap`` mode the
+    window's output shell is kept aside as a drain snapshot while ``reset``
+    (device-side, e.g. ``pshell.group_reset``) hands the next window a
+    fresh shell; the blocking host drain of window *i* then runs while
+    window *i+1*'s compute is already in flight;
+  * tail windows — a step count not divisible by the interval yields a
+    final smaller window, executed and drained exactly once;
+  * barrier points — a ``DrainBarrier`` forces the in-flight window to be
+    drained and ACCEPTED by the host (an ``on_drain`` verifier that raises
+    vetoes the commit) before its action (e.g. a checkpoint save) runs.
+
+Engines must donate at most the model/opt state (argnum 0), never the
+shell: the snapshot must survive on the host until its deferred drain.
+
+``run_many`` schedules several engines through one pass — the ZP-Farm
+shape: many DUT boards, one host; window *w* of every engine is dispatched
+back-to-back before any engine's window *w-1* results are fetched, so every
+board's compute overlaps every board's drain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
+
+from contextlib import contextmanager
+
+from repro.core.pshell import _reset_jitted
+from repro.core.pshell import drain as shell_drain
+from repro.core.pshell import stack_batches
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowPlan:
+    """One clock-gated window: ``size`` consecutive steps from ``start``."""
+    index: int          # window ordinal within the run
+    start: int          # global index of the window's first step
+    size: int           # steps in this window (the tail window may be short)
+
+    @property
+    def last(self) -> int:
+        """Global index of the window's last step (the drain cadence id —
+        ``on_drain`` fires with this, matching the per-step loops)."""
+        return self.start + self.size - 1
+
+    @property
+    def boundary(self) -> int:
+        """Step count after this window completes (checkpoint step ids)."""
+        return self.start + self.size
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainBarrier:
+    """A host commit point: when a window crosses a multiple of ``every``,
+    the scheduler drains that window (in overlap mode this forfeits ONE
+    window's drain/compute overlap, no more) so the host has accepted every
+    step up to the boundary, then calls ``action(state, boundary_step)``."""
+    every: int
+    action: Callable[[Any, int], None]
+
+    def fires(self, plan: WindowPlan) -> bool:
+        return plan.boundary // self.every > plan.start // self.every
+
+
+def plan_windows(steps: int, interval: int, start: int = 0) -> List[WindowPlan]:
+    """Partition steps [start, steps) into interval-sized windows plus a
+    tail. Windows are aligned to ``start`` (the resume point), matching the
+    fused train engine's legacy cadence."""
+    interval = max(1, interval)
+    plans = []
+    i = start
+    while i < steps:
+        g = min(interval, steps - i)
+        plans.append(WindowPlan(index=len(plans), start=i, size=g))
+        i += g
+    return plans
+
+
+def iter_windows(items: Iterable[Any], interval: int):
+    """Chunk a finite iterable of per-step items into window-sized lists."""
+    interval = max(1, interval)
+    buf: list = []
+    for x in items:
+        buf.append(x)
+        if len(buf) == interval:
+            yield buf
+            buf = []
+    if buf:
+        yield buf
+
+
+class _NullTimer:
+    @contextmanager
+    def phase(self, name: str):
+        yield
+
+
+class WindowScheduler:
+    """Owns the host loop shared by training, co-emulation, and serving.
+
+    Parameters
+    ----------
+    interval : the clock-gating granularity (steps per window) — used only
+        by :meth:`windows` convenience chunking; ``run`` consumes whatever
+        window lists it is given.
+    overlap : double-buffer the shell and defer each window's drain until
+        the next window's compute is in flight. ``False`` drains serially
+        in place (the per-step baselines and the bench's serial control).
+    reset : device-side shell reset deriving the NEXT window's shell from
+        the current snapshot (``pshell.group_reset`` jitted — the default
+        whenever overlapping with the P-Shell ``drain_fn``, since an
+        un-reset live shell would re-accumulate and re-drain prior
+        windows' FIFO rows). Explicit ``None`` + ``drain_fn=None`` passes
+        the snapshot through (shell-less clients).
+    drain_fn : host-side ``shell -> (records, reset_shell)``; ``None``
+        for clients whose results ride entirely in ``ys`` (co-emulation).
+    stack_fn : stacks a window's item list into the engine payload;
+        ``None`` hands the engine the raw item list (per-step engines —
+        no redundant window copy).
+    timer : object with a ``phase(name)`` context manager (the live
+        stall-stack profiler duck-types this); attribution follows the
+        fused train engine: "data" = window assembly, "device" = dispatch
+        (the enqueue), "host" = drains and barriers — the wait for window
+        *i* lands in "host" at its drain, concurrent with window *i+1*.
+    """
+
+    def __init__(self, interval: int = 1, *, overlap: bool = True,
+                 reset: Optional[Callable] = None,
+                 drain_fn: Optional[Callable] = shell_drain,
+                 stack_fn: Optional[Callable] = stack_batches,
+                 timer: Any = None):
+        self.interval = max(1, interval)
+        self.overlap = overlap
+        if overlap and reset is None and drain_fn is not None:
+            if drain_fn is shell_drain:
+                reset = _reset_jitted()
+            else:
+                raise ValueError(
+                    "overlap=True with a drain_fn needs a device-side "
+                    "`reset` to double-buffer the shell — without one the "
+                    "un-reset snapshot becomes the live shell and every "
+                    "drain re-reads prior windows' rows (pass reset=, or "
+                    "an explicit identity lambda for non-accumulating "
+                    "shells)")
+        self.reset = reset
+        self.drain_fn = drain_fn
+        self.stack_fn = stack_fn
+        self.timer = timer if timer is not None else _NullTimer()
+
+    def windows(self, items: Iterable[Any]):
+        return iter_windows(items, self.interval)
+
+    # ------------------------------------------------------------- single --
+    def run(self, engine, windows, state, shell, *, start_step: int = 0,
+            on_drain: Optional[Callable] = None,
+            on_dispatch: Optional[Callable] = None,
+            on_window: Optional[Callable] = None,
+            barriers: Sequence[DrainBarrier] = ()):
+        """Drive ``engine`` over ``windows`` (an iterable of per-step item
+        lists, e.g. from :meth:`windows`). Returns ``(state, last_ys,
+        shell)``.
+
+        Callbacks: ``on_dispatch(plan, state)`` fires right after a
+        window's dispatch is enqueued (watchdog heartbeats);
+        ``on_drain(plan, records, ys)`` fires once per window in window
+        order with the drained shell records and the window's ys — raising
+        here vetoes any barrier commit that depends on the window;
+        ``on_window(plan, state)`` fires after the window's host phase
+        (profiler step accounting).
+        """
+        timer = self.timer
+        pending = None              # (plan, shell_snapshot, ys)
+        last_ys = None
+        step = start_step
+        index = 0
+        it = iter(windows)
+        while True:
+            with timer.phase("data"):
+                try:
+                    items = next(it)
+                except StopIteration:
+                    break
+                if not items:
+                    continue
+                stack = self.stack_fn(items) if self.stack_fn else items
+            plan = WindowPlan(index=index, start=step, size=len(items))
+            with timer.phase("device"):
+                state, snap, ys = engine(state, shell, stack)
+                if self.overlap:
+                    shell = self.reset(snap) if self.reset else snap
+            if on_dispatch is not None:
+                on_dispatch(plan, state)
+            with timer.phase("host"):
+                if self.overlap:
+                    self._flush(pending, on_drain)
+                    pending = (plan, snap, ys)
+                else:
+                    records, shell = self._drain_now(snap)
+                    self._emit(plan, records, ys, on_drain)
+                for b in barriers:
+                    if b.fires(plan):
+                        # commit barrier: every window up to the boundary
+                        # must be drained and accepted before the action
+                        self._flush(pending, on_drain)
+                        pending = None
+                        b.action(state, plan.boundary)
+            if on_window is not None:
+                on_window(plan, state)
+            last_ys = ys
+            step += len(items)
+            index += 1
+        with timer.phase("host"):
+            self._flush(pending, on_drain)
+        return state, last_ys, shell
+
+    # -------------------------------------------------------------- multi --
+    def run_many(self, clients, on_drain: Optional[Callable] = None):
+        """ZP-Farm pass: ``clients`` is a list of ``(engine, windows,
+        state, shell)``. Window *w* of EVERY client is dispatched before
+        any client's window *w-1* is drained, so each engine's drain
+        overlaps every engine's in-flight compute. Clients may have
+        different window counts; a finished client's last pending window
+        drains in the round it stops dispatching (after every still-alive
+        client's dispatch, preserving the dispatch-before-fetch order).
+        ``on_drain(client_idx, plan, records, ys)``. Returns the list of
+        final ``(state, shell)`` per client."""
+        n = len(clients)
+        its = [iter(w) for (_, w, _, _) in clients]
+        engines = [e for (e, _, _, _) in clients]
+        states = [s for (_, _, s, _) in clients]
+        shells = [sh for (_, _, _, sh) in clients]
+        steps = [0] * n
+        indexes = [0] * n
+        pendings: List[Optional[Tuple]] = [None] * n
+        alive = [True] * n
+        while any(alive):
+            dispatched = [None] * n
+            finished = []
+            for k in range(n):
+                if not alive[k]:
+                    continue
+                try:
+                    items = next(its[k])
+                except StopIteration:
+                    alive[k] = False
+                    finished.append(k)
+                    continue
+                if not items:
+                    continue
+                stack = self.stack_fn(items) if self.stack_fn else items
+                plan = WindowPlan(index=indexes[k], start=steps[k],
+                                  size=len(items))
+                states[k], snap, ys = engines[k](states[k], shells[k], stack)
+                if self.overlap:
+                    shells[k] = self.reset(snap) if self.reset else snap
+                dispatched[k] = (plan, snap, ys)
+                steps[k] += len(items)
+                indexes[k] += 1
+            for k in finished:          # after every live client dispatched
+                self._flush(pendings[k], on_drain, client=k)
+                pendings[k] = None
+            for k in range(n):
+                if dispatched[k] is None:
+                    continue
+                if self.overlap:
+                    self._flush(pendings[k], on_drain, client=k)
+                    pendings[k] = dispatched[k]
+                else:
+                    plan, snap, ys = dispatched[k]
+                    records, shells[k] = self._drain_now(snap)
+                    self._emit(plan, records, ys, on_drain, client=k)
+        for k in range(n):
+            self._flush(pendings[k], on_drain, client=k)
+        return list(zip(states, shells))
+
+    # ----------------------------------------------------------- plumbing --
+    def _drain_now(self, snap):
+        if self.drain_fn is None:
+            return {}, snap
+        return self.drain_fn(snap)
+
+    def _flush(self, pending, on_drain, client=None):
+        if pending is None:
+            return
+        plan, snap, ys = pending
+        if self.drain_fn is not None:
+            records, _ = self.drain_fn(snap)   # snapshot's reset state is
+        else:                                  # discarded: the live shell
+            records = {}                       # was reset on device
+        self._emit(plan, records, ys, on_drain, client=client)
+
+    @staticmethod
+    def _emit(plan, records, ys, on_drain, client=None):
+        if on_drain is None:
+            return
+        if client is None:
+            on_drain(plan, records, ys)
+        else:
+            on_drain(client, plan, records, ys)

@@ -1,7 +1,17 @@
-"""Serving CLI: batched prefill + decode with P-Shell watchdog protection.
+"""Serving CLI: batched prefill + decode, driven through the core
+WindowScheduler — the proof that the overlapped-drain harness is
+workload-agnostic, not a training-loop special case.
+
+Decode runs as scan-fused windows of ``sample_interval`` autoregressive
+steps: ONE jit dispatch per window (donated cache), with a decode FIFO in
+the P-Shell carrying per-token telemetry ([step, mean token id, max
+logit]) and a ``tokens`` CSR counting emissions. The scheduler
+double-buffers the shell so the host drain of window *i* — where the
+blocking token fetch and the per-window decode-latency sample land —
+overlaps window *i+1*'s in-flight decode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \\
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 --sample-interval 4
 """
 from __future__ import annotations
 
@@ -14,14 +24,51 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.core import Watchdog
+from repro.core import Watchdog, WindowScheduler
+from repro.core.pshell import (FifoSpec, ShellConfig, csr_accum, drain,
+                               fifo_push, shell_init)
 from repro.data.pipeline import make_batch_fn
 from repro.models import build_model
 from repro.models.runtime import Runtime
-from repro.serve import make_prefill_step, make_serve_step
+from repro.serve import make_prefill_step
 
 
-def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
+def decode_shell_config(sample_interval: int) -> ShellConfig:
+    """Decode-telemetry shell: one FIFO row per generated token (depth one
+    clock-gated window — lossless at any interval), plus a token counter."""
+    return ShellConfig(
+        csrs={"tokens": jax.ShapeDtypeStruct((), jnp.int32)},
+        fifos={"decode": FifoSpec(depth=max(1, sample_interval), shape=(3,),
+                                  dtype=jnp.float32)},
+        sample_interval=sample_interval)
+
+
+def make_decode_engine(model, params):
+    """Scheduler engine for decode: state=(cache, last_token); scans one
+    decode step per window slot, pushing telemetry into the shell. Donates
+    the cache/token state ONLY — the shell snapshot must survive on the
+    host until its overlapped drain."""
+    def engine(state, shell, idx_stack):
+        def body(carry, idx):
+            cache, tok, sh = carry
+            cache, logits = model.decode_step(params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            payload = jnp.stack([idx.astype(jnp.float32),
+                                 jnp.mean(tok.astype(jnp.float32)),
+                                 jnp.max(logits).astype(jnp.float32)])
+            sh = fifo_push(sh, "decode", payload)
+            sh = csr_accum(sh, "tokens", jnp.int32(tok.shape[0]), op="add")
+            return (cache, tok, sh), tok
+
+        (cache, tok, shell), toks = jax.lax.scan(
+            body, (state[0], state[1], shell), idx_stack)
+        return (cache, tok), shell, toks
+
+    return jax.jit(engine, donate_argnums=(0,))
+
+
+def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
+          sample_interval: int = 4):
     model = build_model(cfg, Runtime())
     params = model.init(jax.random.key(seed))
     bf = make_batch_fn(cfg, batch, prompt_len, seed)
@@ -29,26 +76,50 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0):
     max_len = prompt_len + (cfg.num_patches if cfg.family == "vlm" else 0) \
         + gen + 8
     prefill = jax.jit(make_prefill_step(model, max_len))
-    step = jax.jit(make_serve_step(model), donate_argnums=1)
     wd = Watchdog(timeout_s=120.0)
 
     t0 = time.perf_counter()
     cache, logits = prefill(params, b)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     t1 = time.perf_counter()
+
+    engine = make_decode_engine(model, params)
+    # reset defaults to the cached jitted group_reset (P-Shell drain_fn)
+    sched = WindowScheduler(interval=max(1, sample_interval), overlap=True,
+                            drain_fn=drain)
+    sh = shell_init(decode_shell_config(sample_interval))
+
     out_tokens = [np.asarray(tok)]
-    for _ in range(gen - 1):
-        cache, logits = step(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens.append(np.asarray(tok))
+    dispatch_t: dict = {}
+    window_ms: list = []
+    fifo_rows = 0
+
+    def on_dispatch(plan, state):
+        dispatch_t[plan.index] = time.perf_counter()
         wd.heartbeat()
-    jax.block_until_ready(tok)
+
+    def on_drain(plan, records, toks):
+        nonlocal fifo_rows
+        out_tokens.append(np.asarray(toks)[:, :, 0].T)  # blocking fetch
+        # dispatch-to-drain PIPELINED latency: the drain of window i runs
+        # after window i+1's dispatch, so this includes the overlapped
+        # host-side assembly of the next window — "time until window i's
+        # tokens were in hand", not pure device decode time
+        window_ms.append((time.perf_counter() - dispatch_t[plan.index])
+                         * 1e3)
+        fifo_rows += records["fifos"]["decode"]["count"]
+
+    (cache, tok), _, sh = sched.run(
+        engine, sched.windows(range(gen - 1)), (cache, tok), sh,
+        on_dispatch=on_dispatch, on_drain=on_drain)
     t2 = time.perf_counter()
     toks = np.concatenate(out_tokens, axis=1)
     return {
         "prefill_s": t1 - t0,
         "decode_s": t2 - t1,
         "decode_tok_per_s": batch * (gen - 1) / max(t2 - t1, 1e-9),
+        "decode_window_ms": [round(x, 2) for x in window_ms],
+        "decode_fifo_rows": fifo_rows,
         "generated": toks[:, :8].tolist(),
         "hung": wd.should_restart(),
     }
@@ -61,9 +132,11 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sample-interval", type=int, default=4)
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    print(json.dumps(serve(cfg, args.batch, args.prompt_len, args.gen),
+    print(json.dumps(serve(cfg, args.batch, args.prompt_len, args.gen,
+                           sample_interval=args.sample_interval),
                      indent=1, default=float))
 
 

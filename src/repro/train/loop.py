@@ -5,20 +5,32 @@ instrumentation (drain at the gating granularity -> coverage + commit
 verification hooks), profiler phases (device/host/data attribution),
 watchdog heartbeats, async checkpointing, and restart-from-latest.
 
-Two execution engines, bit-identical by construction (tests assert it):
+Both execution engines run through the core ``WindowScheduler``
+(``repro.core.schedule``) — engine selection is the ONLY difference, the
+window/drain/barrier machinery is shared and bit-identical by construction
+(tests assert it):
 
   fused (default) — the whole clock-gated window (``sample_interval``
       steps) is ONE jit dispatch (lax.scan over a stacked batch group, see
       train.step.make_group_step). Losses/metrics accumulate on device and
-      cross to the host once per group; the drain of group *i* overlaps the
-      in-flight compute of group *i+1* (double-buffered shell). Checkpoint,
-      watchdog, and coverage all move to group boundaries.
+      cross to the host once per group; the scheduler overlaps the drain of
+      window *i* with the in-flight compute of window *i+1* (double-buffered
+      shell, ``overlap=True``).
 
-  per-step — one dispatch per batch, kept as the equivalence baseline.
-      Even here nothing blocks inside the "device" phase: loss arrays are
-      held on device and materialized only at drain boundaries, so the
-      profiler's device phase measures dispatch/compute, not a forced
-      host<->device sync per step.
+  per-step — one dispatch per batch inside the window (``overlap=False``),
+      kept as the equivalence baseline. Even here nothing blocks inside the
+      "device" phase: loss arrays are held on device and materialized only
+      at drain boundaries, so the profiler's device phase measures
+      dispatch/compute, not a forced host<->device sync per step.
+
+Profiler, watchdog, coverage, and checkpointing hook in via scheduler
+callbacks: the profiler IS the scheduler's phase timer, the watchdog
+heartbeats from ``on_dispatch``, coverage folds drained CSRs in
+``on_drain``, and checkpoints are ``DrainBarrier`` actions — a checkpoint
+at a boundary may only hit disk after every window up to it was drained
+and ACCEPTED by the host (an on_drain verifier that raises vetoes it).
+Both engines share the barrier semantics: saves commit at the first window
+boundary at/after each ``checkpoint_every`` mark.
 
 Profiler attribution under async dispatch: "device" is dispatch time (the
 enqueue), and the wait for a window's results lands in the "host" phase at
@@ -35,8 +47,8 @@ import jax
 import numpy as np
 
 from repro.core import (PShell, default_shell_config, make_ingest,
-                        CoverageMap, Profiler, Watchdog, drain,
-                        stack_batches)
+                        CoverageMap, Profiler, Watchdog, DrainBarrier,
+                        plan_windows)
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticPipeline
 from repro.train.optim import OptConfig
@@ -106,60 +118,57 @@ def train_loop(model, loop_cfg: LoopConfig,
     }
 
 
+def _pipe_windows(pipe, loop_cfg, start_step):
+    """Window source: pull each planned window's batches from the pipeline
+    (consumed inside the scheduler's "data" phase)."""
+    for plan in plan_windows(loop_cfg.steps, loop_cfg.sample_interval,
+                             start=start_step):
+        yield [next(pipe) for _ in range(plan.size)]
+
+
+def _barriers(ckpt, loop_cfg):
+    if not ckpt:
+        return ()
+    return (DrainBarrier(every=loop_cfg.checkpoint_every,
+                         action=lambda state, step: ckpt.save(state, step)),)
+
+
+def _step_counter(prof):
+    """on_window hook: one profiler step per step of the drained window."""
+    def step_done(plan, state):
+        for _ in range(plan.size):
+            prof.step_done()
+    return step_done
+
+
 def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
                prof, wd, cov, ckpt, losses, start_step, on_drain):
-    """Group-granular driver: one fused dispatch per clock-gated window,
+    """Group-granular engine: one fused dispatch per clock-gated window,
     host drain of window i overlapped with window i+1's device compute."""
-    interval = max(1, loop_cfg.sample_interval)
-    group_fn, reset = shell.compile_group(
+    group_fn = shell.compile_group(
         make_group_step(model, opt_cfg, ingest=ingest,
                         grad_compress=loop_cfg.grad_compress,
                         accum_steps=loop_cfg.accum_steps))
+    sched = shell.scheduler(overlap=True, timer=prof)
 
-    pending = None                  # (last_step_idx, shell_snapshot, metrics)
-
-    def drain_pending():
-        nonlocal pending
-        if pending is None:
-            return
-        i, snap, metrics = pending
-        pending = None
-        records, _ = drain(snap)
+    def emit(plan, records, metrics):
         losses.extend(np.asarray(metrics["loss"], np.float32).tolist())
         cov.update(records["csrs"])
         if on_drain:
-            on_drain(i, records)
+            on_drain(plan.last, records)
 
-    i = start_step
-    while i < loop_cfg.steps:
-        g = min(interval, loop_cfg.steps - i)
-        with prof.phase("data"):
-            stack = stack_batches([next(pipe) for _ in range(g)])
-        with prof.phase("device"):
-            state, snap, metrics = group_fn(state, sh, stack)
-            sh = reset(snap)
-        wd.heartbeat()
-        with prof.phase("host"):
-            drain_pending()         # overlaps the dispatch queued above
-            pending = (i + g - 1, snap, metrics)
-            if ckpt and _crosses_mark(i, g, loop_cfg.checkpoint_every):
-                # commit barrier: a checkpoint at step i+g may only hit disk
-                # after every window up to i+g was drained and ACCEPTED by
-                # the host (an on_drain verifier that raises must veto it) —
-                # costs this one window's drain/compute overlap, no more
-                drain_pending()
-                ckpt.save(state, i + g)
-        for _ in range(g):
-            prof.step_done()
-        i += g
-    with prof.phase("host"):
-        drain_pending()
+    state, _, _ = sched.run(
+        group_fn, _pipe_windows(pipe, loop_cfg, start_step), state, sh,
+        start_step=start_step, on_drain=emit,
+        on_dispatch=lambda plan, state: wd.heartbeat(),
+        on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg))
     return state
 
 
 def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
                   prof, wd, cov, ckpt, losses, start_step, on_drain):
-    """Per-step dispatch baseline. Loss materialization is deferred to drain
+    """Per-step dispatch baseline (``overlap=False``: serial in-place
+    drains at window boundaries). Loss materialization is deferred to drain
     boundaries — no blocking sync inside the device phase."""
     step_fn = jax.jit(make_train_step(
         model, opt_cfg, with_aux=True,
@@ -171,44 +180,24 @@ def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
         return state, metrics, ingest(shell_state, aux, metrics)
 
     wrapped = jax.jit(wrapped)
+    sched = shell.scheduler(overlap=False, timer=prof, stacked=False)
 
-    pending_losses: list = []       # device arrays, materialized at drains
+    def engine(state, sh, batches):
+        window_losses = []          # device arrays, materialized at drain
+        for batch in batches:
+            state, metrics, sh = wrapped(state, batch, sh)
+            window_losses.append(metrics["loss"])
+            wd.heartbeat()
+        return state, sh, window_losses
 
-    def materialize():
-        losses.extend(float(x) for x in pending_losses)
-        pending_losses.clear()
-
-    def do_drain(i):
-        nonlocal sh
-        records, sh = drain(sh)
-        materialize()
+    def emit(plan, records, window_losses):
+        losses.extend(float(x) for x in window_losses)
         cov.update(records["csrs"])
         if on_drain:
-            on_drain(i, records)
+            on_drain(plan.last, records)
 
-    since_drain = 0
-    for i in range(start_step, loop_cfg.steps):
-        with prof.phase("data"):
-            batch = next(pipe)
-        with prof.phase("device"):
-            state, metrics, sh = wrapped(state, batch, sh)
-            pending_losses.append(metrics["loss"])
-        wd.heartbeat()
-        since_drain += 1
-        with prof.phase("host"):
-            if (i + 1) % loop_cfg.sample_interval == 0:
-                do_drain(i)
-                since_drain = 0
-            if ckpt and (i + 1) % loop_cfg.checkpoint_every == 0:
-                ckpt.save(state, i + 1)
-        prof.step_done()
-    if since_drain:                 # tail window, same cadence as fused
-        do_drain(loop_cfg.steps - 1)
-    materialize()
+    state, _, _ = sched.run(
+        engine, _pipe_windows(pipe, loop_cfg, start_step), state, sh,
+        start_step=start_step, on_drain=emit,
+        on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg))
     return state
-
-
-def _crosses_mark(i: int, g: int, every: int) -> bool:
-    """True when any step j in window [i, i+g) has (j+1) % every == 0 —
-    checkpointing fires at the first group boundary at/after each mark."""
-    return (i + g) // every > i // every

@@ -108,7 +108,9 @@ def make_group_step(model, opt_cfg: OptConfig = OptConfig(),
     ``ingest``) over a stacked batch group in ONE dispatch.
 
     Returns ``group_step(state, shell, batch_stack) -> (state, shell,
-    metrics_stack)`` where ``batch_stack`` leaves have a leading (g,) group
+    metrics_stack)`` — exactly the *engine* signature the core
+    ``WindowScheduler`` dispatches (``core/schedule.py``); ``batch_stack``
+    leaves have a leading (g,) group
     axis and ``metrics_stack`` holds every step's metrics stacked on device
     ((g,) per scalar) — the host fetches them once per group, not once per
     step. With ``ingest=None`` the shell (any pytree, e.g. ``{}``) passes

@@ -158,7 +158,7 @@ def test_shell_non_interference(arch):
                                              cfg.vocab_size),
                 "labels": jax.random.randint(jax.random.key(i + 99), (2, 16),
                                              0, cfg.vocab_size)}
-               for i in range(3)]
+               for i in range(2)]
 
     def run(taps, interval):
         model = build_model(cfg, Runtime(taps=taps))

@@ -129,43 +129,9 @@ def test_group_step_without_shell():
 
 
 # ------------------------------------------------------------ train driver --
-def test_train_loop_fused_equals_per_step():
-    cfg = get_smoke_config("granite-8b")
-
-    def model():
-        return build_model(cfg, Runtime(taps=TAPS))
-
-    lc = dict(steps=6, batch=2, seq=16, sample_interval=3)
-    fused = train_loop(model(), LoopConfig(fused=True, **lc), resume=False)
-    plain = train_loop(model(), LoopConfig(fused=False, **lc), resume=False)
-    assert fused["losses"] == plain["losses"]
-    _assert_trees_bitwise(fused["state"], plain["state"])
-    assert fused["coverage"]["fraction"] == plain["coverage"]["fraction"]
-
-
-def test_train_loop_fused_tail_group():
-    """steps not divisible by the interval: the tail window is a smaller
-    group, every step is still executed and drained exactly once, and both
-    engines agree on the drain cadence and results."""
-    cfg = get_smoke_config("granite-8b")
-
-    def model():
-        return build_model(cfg, Runtime(taps=TAPS))
-
-    lc = dict(steps=7, batch=2, seq=16, sample_interval=4)
-    drains_f, drains_p = [], []
-    fused = train_loop(model(), LoopConfig(fused=True, **lc),
-                       on_drain=lambda i, r: drains_f.append(i),
-                       resume=False)
-    plain = train_loop(model(), LoopConfig(fused=False, **lc),
-                       on_drain=lambda i, r: drains_p.append(i),
-                       resume=False)
-    assert len(fused["losses"]) == 7
-    assert drains_f == drains_p == [3, 6]
-    assert fused["losses"] == plain["losses"]
-    _assert_trees_bitwise(fused["state"], plain["state"])
-    assert fused["coverage"]["fraction"] == plain["coverage"]["fraction"]
-
+# (fused-vs-per-step train_loop equivalence, including tail windows and
+# drain cadence, is covered by test_scheduler_train_loop_equivalence_with_
+# tail below at intervals {1, 3, 8} over a non-divisible step count)
 
 # ------------------------------------------------------------ co-emulation --
 @pytest.mark.parametrize("fault_layer", [0, 1])
@@ -211,3 +177,132 @@ def test_inject_fault_raises_without_stacked_leaf():
     params = {"stack": {"blocks": ({"w": jnp.ones((4, 4))},)}}
     with pytest.raises(ValueError, match="ndim >= 3"):
         inject_fault(params, cfg, 0)
+
+
+# ------------------------------------------------- scheduler equivalence ---
+# The WindowScheduler now backs all four host loops; for intervals that do
+# NOT divide the step count (tail windows) every client must stay
+# bit-identical to its per-step baseline.
+
+@pytest.mark.parametrize("interval", [1, 3, 8])
+def test_scheduler_pshell_equivalence_with_tail(interval):
+    """PShell.run (per-step, serial drains) vs run_grouped (fused,
+    overlapped drains) over 10 steps: bit-identical final state and drained
+    commit records, including the tail window's."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=TAPS))
+    batches = _batches(cfg, 10)
+    ingest = make_ingest(cfg)
+    shell = PShell(default_shell_config(cfg, sample_interval=interval),
+                   ingest)
+
+    step = jax.jit(make_train_step(model, with_aux=True))
+    recs_ps, recs_g = [], []
+    s_ps, _, _ = shell.run(
+        shell.wrap(step), init_state(model, jax.random.key(0)), batches,
+        on_drain=lambda i, r: recs_ps.append((i, r)))
+
+    group_step = make_group_step(model, ingest=ingest)
+    s_g, metrics, _ = shell.run_grouped(
+        group_step, init_state(model, jax.random.key(0)), batches,
+        on_drain=lambda i, r: recs_g.append((i, r)))
+
+    _assert_trees_bitwise(s_ps, s_g)
+    _assert_records_equal(recs_ps, recs_g)
+    # drains at every window boundary incl. the tail, per-step and fused
+    expect = [min(i + interval, 10) - 1 for i in range(0, 10, interval)]
+    assert [i for i, _ in recs_g] == expect
+    # the last (tail) window's metrics stack is tail-sized
+    assert metrics["loss"].shape == (10 % interval or interval,)
+
+
+@pytest.mark.parametrize("interval", [1, 3, 8])
+def test_scheduler_train_loop_equivalence_with_tail(interval):
+    """Scheduler-backed train_loop, both engines, 10 steps: bit-identical
+    losses, state, coverage, and drain cadence at every interval."""
+    cfg = get_smoke_config("granite-8b")
+
+    def model():
+        return build_model(cfg, Runtime(taps=TAPS))
+
+    lc = dict(steps=10, batch=2, seq=16, sample_interval=interval)
+    drains_f, drains_p = [], []
+    fused = train_loop(model(), LoopConfig(fused=True, **lc),
+                       on_drain=lambda i, r: drains_f.append(i),
+                       resume=False)
+    plain = train_loop(model(), LoopConfig(fused=False, **lc),
+                       on_drain=lambda i, r: drains_p.append(i),
+                       resume=False)
+    assert len(fused["losses"]) == 10
+    assert fused["losses"] == plain["losses"]
+    assert drains_f == drains_p
+    assert drains_f[-1] == 9            # tail window drained exactly once
+    _assert_trees_bitwise(fused["state"], plain["state"])
+    assert fused["coverage"]["fraction"] == plain["coverage"]["fraction"]
+
+
+@pytest.mark.parametrize("interval", [3, 8])
+def test_scheduler_coemu_equivalence_with_tail(interval):
+    """CoEmulator.verify(group_size=N) (scan-fused, overlapped fetch) vs
+    the step-locked loop over 10 steps: identical CoEmuReport fields on a
+    clean run, and the serial (overlap=False) baseline agrees too."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    step = jax.jit(make_train_step(model, with_aux=True))
+    state = init_state(model, jax.random.key(2))
+    batches = [{k: jnp.asarray(v) for k, v in b.items()}
+               for b in _batches(cfg, 10)]
+    emu = CoEmulator(step, step, rtol=1e-6)
+    rep_s = emu.verify(state, state, batches)
+    rep_g = emu.verify(state, state, batches, group_size=interval)
+    rep_ser = emu.verify(state, state, batches, group_size=interval,
+                         overlap=False)
+    for rep in (rep_s, rep_g, rep_ser):
+        assert rep.steps == 10
+        assert not rep.diverged and rep.first is None
+    assert rep_g.max_rel_err == rep_s.max_rel_err == rep_ser.max_rel_err
+    assert rep_g.loss_max_abs_diff == rep_s.loss_max_abs_diff \
+        == rep_ser.loss_max_abs_diff
+
+
+# ------------------------------------------------------------- jit caches --
+def test_compile_group_cache_never_aliases_distinct_fns():
+    """Cache-contract guard: the jit caches key on the function OBJECT,
+    not id(). id() keys are only sound while something keeps every cached
+    fn alive; object keys make the no-aliasing guarantee (two distinct
+    step fns never share an entry) unconditional."""
+    cfg = get_smoke_config("granite-8b")
+    shell = PShell(default_shell_config(cfg), make_ingest(cfg))
+
+    def make_fn(tag):
+        def group_step(state, sh, stack):
+            return state, sh, {"tag": jnp.float32(tag)}
+        return group_step
+
+    f1 = make_fn(1.0)
+    j1 = shell.compile_group(f1, donate=False)
+    assert shell.compile_group(f1, donate=False) is j1      # cache hit
+    # drop our strong ref; a distinct fn must still get its own entry
+    del f1
+    f2 = make_fn(2.0)
+    j2 = shell.compile_group(f2, donate=False)
+    assert j2 is not j1
+    assert float(j2(None, {}, {"x": jnp.zeros(1)})[2]["tag"]) == 2.0
+
+
+def test_coemu_group_cache_never_aliases_distinct_fns():
+    def make_step(tag):
+        def step(state, batch):
+            return state, {"loss": jnp.float32(tag)}, {
+                "scanned": (), "tail": ()}
+        return step
+
+    s1 = make_step(1.0)
+    s2 = make_step(2.0)
+    emu = CoEmulator(s1, s2)
+    g1 = emu._cached_group(s1)
+    assert emu._cached_group(s1) is g1
+    del s1
+    g2 = emu._cached_group(s2)
+    assert g2 is not g1
+    assert len(emu._group_fns) == 2

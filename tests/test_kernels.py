@@ -75,10 +75,13 @@ def test_flash_attention_softcap():
     assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 
-@settings(max_examples=8, deadline=None)
-@given(s=st.integers(17, 200), h=st.sampled_from([2, 4]),
+@settings(max_examples=6, deadline=None)
+@given(s=st.integers(17, 96), h=st.sampled_from([2, 4]),
        g=st.sampled_from([1, 2]))
 def test_flash_attention_property(s, h, g):
+    # s up to 96 crosses the 64-wide block boundary with ragged padding,
+    # which is all the padding-correctness property needs; each distinct
+    # shape is a fresh interpret-mode compile, so examples are the budget
     """Property: kernel == oracle for arbitrary lengths (padding correct)."""
     ks = jax.random.split(jax.random.key(s * 7 + h), 3)
     hd, K = 16, h // g if h % g == 0 else 1
@@ -165,8 +168,10 @@ def test_rglru_scan(B, S, W):
 
 
 @settings(max_examples=8, deadline=None)
-@given(s1=st.integers(8, 48), s2=st.integers(8, 48))
+@given(s1=st.integers(8, 24), s2=st.integers(8, 24))
 def test_rglru_scan_chaining_property(s1, s2):
+    # 8..24 crosses the chunk=8 boundary at ragged offsets — the whole
+    # chaining contract — at a fraction of the CI cost of long sequences
     """Property: scanning [a1;a2] == scan(a2) seeded with scan(a1) state.
     (The decode/prefill continuation contract.)"""
     ks = jax.random.split(jax.random.key(s1 * 100 + s2), 3)

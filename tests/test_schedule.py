@@ -1,0 +1,183 @@
+"""Core WindowScheduler unit tests: window planning, drain ordering and
+overlap bookkeeping, barrier veto semantics, the ZP-Farm multi-engine pass,
+and the scheduler-driven serve + multi-DUT clients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (DrainBarrier, WindowPlan, WindowScheduler,
+                        iter_windows, plan_windows)
+from repro.core.coemu import inject_fault, verify_subsystems
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.utils import dtype_of
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------- planning --
+def test_plan_windows_tail_and_resume():
+    plans = plan_windows(10, 4)
+    assert [(p.start, p.size) for p in plans] == [(0, 4), (4, 4), (8, 2)]
+    assert plans[-1].last == 9 and plans[-1].boundary == 10
+    # resume alignment: windows restart from the checkpoint step
+    plans = plan_windows(10, 4, start=6)
+    assert [(p.start, p.size) for p in plans] == [(6, 4)]
+
+
+def test_iter_windows_chunks_with_tail():
+    assert list(iter_windows(range(7), 3)) == [[0, 1, 2], [3, 4, 5], [6]]
+    assert list(iter_windows([], 3)) == []
+
+
+def test_overlap_with_custom_drain_requires_reset():
+    """overlap + a drain_fn needs a double-buffer reset: the P-Shell drain
+    gets the cached group_reset by default, anything else must be explicit
+    or the live shell would re-accumulate prior windows' rows."""
+    with pytest.raises(ValueError, match="reset"):
+        WindowScheduler(overlap=True, drain_fn=lambda s: ({}, s))
+    # explicit reset (or identity for non-accumulating shells) is accepted
+    WindowScheduler(overlap=True, drain_fn=lambda s: ({}, s),
+                    reset=lambda s: s)
+
+
+def test_drain_barrier_fires_on_crossing():
+    b = DrainBarrier(every=5, action=lambda s, i: None)
+    assert not b.fires(WindowPlan(index=0, start=0, size=3))
+    assert b.fires(WindowPlan(index=1, start=3, size=3))      # crosses 5
+    assert b.fires(WindowPlan(index=0, start=0, size=10))     # crosses twice
+
+
+# ------------------------------------------------------------- run/overlap --
+def _counting_engine(log):
+    def engine(state, shell, stack):
+        n = int(np.asarray(stack).shape[0])
+        log.append(("dispatch", state, n))
+        return state + n, shell, np.asarray(stack)
+    return engine
+
+
+def test_run_overlap_defers_drain_by_one_window():
+    """In overlap mode the drain of window i lands AFTER window i+1's
+    dispatch; serial mode drains in window order immediately."""
+    for overlap, expect in [
+        (True, ["d0", "d1", "drain0", "d2", "drain1", "drain2"]),
+        (False, ["d0", "drain0", "d1", "drain1", "d2", "drain2"]),
+    ]:
+        events = []
+
+        def engine(state, shell, stack):
+            events.append(f"d{state}")
+            return state + 1, shell, stack
+
+        sched = WindowScheduler(interval=2, overlap=overlap, drain_fn=None,
+                                stack_fn=lambda items: np.asarray(items))
+        state, last_ys, _ = sched.run(
+            engine, sched.windows(range(5)), 0, {},
+            on_drain=lambda plan, rec, ys: events.append(
+                f"drain{plan.index}"))
+        assert state == 3
+        assert events == expect, (overlap, events)
+        np.testing.assert_array_equal(last_ys, [4])     # tail window ys
+
+
+def test_run_barrier_flushes_pending_and_vetoes():
+    """A DrainBarrier drains the in-flight window before its action; a
+    raising on_drain verifier vetoes the commit."""
+    commits, drained = [], []
+    sched = WindowScheduler(interval=2, overlap=True, drain_fn=None,
+                            stack_fn=lambda items: np.asarray(items))
+
+    def engine(state, shell, stack):
+        return state, shell, stack
+
+    sched.run(engine, sched.windows(range(8)), 0, {},
+              on_drain=lambda plan, rec, ys: drained.append(plan.boundary),
+              barriers=[DrainBarrier(
+                  every=4, action=lambda s, step: commits.append(step))])
+    assert commits == [4, 8]
+    # every commit happened only after its window was drained
+    assert drained == [2, 4, 6, 8]
+
+    with pytest.raises(RuntimeError, match="veto"):
+        def verifier(plan, rec, ys):
+            if plan.boundary == 4:
+                raise RuntimeError("veto")
+        sched.run(engine, sched.windows(range(8)), 0, {},
+                  on_drain=verifier,
+                  barriers=[DrainBarrier(
+                      every=4, action=lambda s, step: commits.append(step))])
+    assert commits == [4, 8]            # the vetoed run committed nothing
+
+
+def test_run_many_interleaves_all_engines_before_drain():
+    """ZP-Farm pass: window w of every engine dispatches before any
+    engine's window w-1 drains; engines with fewer windows finish early."""
+    events = []
+
+    def make_engine(name):
+        def engine(state, shell, stack):
+            events.append(f"{name}:d{int(np.asarray(stack)[0])}")
+            return state, shell, stack
+        return engine
+
+    sched = WindowScheduler(interval=1, overlap=True, drain_fn=None,
+                            stack_fn=lambda items: np.asarray(items))
+    out = sched.run_many(
+        [(make_engine("a"), iter_windows([0, 1], 1), "sa", {}),
+         (make_engine("b"), iter_windows([0], 1), "sb", {})],
+        on_drain=lambda k, plan, rec, ys: events.append(
+            f"{'ab'[k]}:drain{plan.index}"))
+    assert out == [("sa", {}), ("sb", {})]
+    # both engines' window 0 dispatches precede either drain; b's last
+    # pending window drains as soon as b stops dispatching
+    assert events == ["a:d0", "b:d0", "a:d1", "b:drain0", "a:drain0",
+                      "a:drain1"]
+
+
+# --------------------------------------------------------------- multi-DUT --
+def test_verify_subsystems_farm_localizes_fault():
+    """Several extracted subsystems verify as independent engines in one
+    scheduler pass; a fault injected into one layer's params diverges that
+    subsystem ONLY, on every step."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    xs = [jax.random.normal(jax.random.key(i), (B, S, cfg.d_model))
+          .astype(dtype_of(cfg.dtype)) for i in range(3)]
+    pos = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None], (B, 1))
+    rt = Runtime()
+
+    clean = verify_subsystems(params, cfg, rt, xs, pos, layer_idxs=[0, 1],
+                              group_size=2)
+    assert set(clean) == {"layer0", "layer1"}
+    assert not clean["layer0"].diverged and not clean["layer1"].diverged
+    assert clean["layer0"].steps == clean["layer1"].steps == 3
+
+    bad = inject_fault(params, cfg, 1)
+    reps = verify_subsystems(params, cfg, rt, xs, pos, layer_idxs=[0, 1],
+                             group_size=2, dut_params=bad)
+    assert not reps["layer0"].diverged
+    assert reps["layer1"].diverged
+    assert reps["layer1"].first.step == 0
+    assert reps["layer1"].first.layer == 1
+
+
+# ------------------------------------------------------------------- serve --
+def test_serve_decodes_through_scheduler():
+    """The serve client is a WindowScheduler workload: windowed scan-fused
+    decode with a telemetry FIFO, one drain per window (tail included)."""
+    from repro.launch.serve import serve
+
+    cfg = get_smoke_config("granite-8b")
+    out = serve(cfg, batch=2, prompt_len=8, gen=8, sample_interval=3)
+    toks = np.asarray(out["generated"])
+    assert toks.shape == (2, 8)
+    assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
+    # gen-1 = 7 decode steps -> windows of 3, 3, 1
+    assert len(out["decode_window_ms"]) == 3
+    assert out["decode_fifo_rows"] == 7   # lossless telemetry at any interval
+    assert not out["hung"]

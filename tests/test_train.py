@@ -105,7 +105,7 @@ def test_grad_accumulation_equivalence():
 
 
 # -------------------------------------------------------------- compression --
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=10, deadline=None)
 @given(scale=st.floats(1e-3, 1e3), n=st.integers(4, 64))
 def test_ef_compression_conservation_property(scale, n):
     """EF invariant: g_hat + residual' == g + residual exactly (f32)."""
