@@ -1,0 +1,86 @@
+"""ZP-Farm throughput: N subsystem boards through the FarmManager vs the
+same boards run serially (a one-slot farm — identical plumbing, no
+concurrency). The farm number is the paper's board-farm claim: every
+board's window dispatches before any board's previous window is fetched,
+so each board's host drain overlaps every board's in-flight compute.
+Also records that eviction + requeue preserves verified outputs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs import get_smoke_config
+from repro.core.coemu import _stack_on_device, subsystem_boards
+from repro.core.schedule import iter_windows
+from repro.farm import FarmJob, FarmManager
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.utils import dtype_of
+
+GROUP = 2
+
+
+def _run(boards, slots: int, force_evict=None, sinks=None):
+    mgr = FarmManager(slots=slots, evict_stragglers=False)
+    for i, (engine, x_ins, _) in enumerate(boards):
+        name = f"board{i}"
+        mgr.submit(FarmJob(
+            name=name, engine=engine,
+            windows=list(iter_windows(x_ins, GROUP)), shell={},
+            stack_fn=_stack_on_device,
+            on_drain=sinks[name] if sinks else None))
+    if force_evict:
+        mgr.force_evict(force_evict)
+    return mgr.run()
+
+
+def main():
+    cfg = get_smoke_config("recurrentgemma-2b")   # 3+ extractable layers
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(0))
+    B, S, n_steps = 2, 16, 8
+    xs = [jax.random.normal(jax.random.key(i), (B, S, cfg.d_model))
+          .astype(dtype_of(cfg.dtype)) for i in range(n_steps)]
+    pos = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None], (B, 1))
+    boards = subsystem_boards(params, cfg, Runtime(), xs, pos,
+                              layer_idxs=[0, 1, 2])
+    total_steps = len(boards) * n_steps
+
+    _run(boards, slots=1)                       # compile every board
+    us_serial = timeit(lambda: _run(boards, slots=1), n=5)
+    us_farm = timeit(lambda: _run(boards, slots=len(boards)), n=5)
+    sps_serial = total_steps / (us_serial / 1e6)
+    sps_farm = total_steps / (us_farm / 1e6)
+    emit("farm_serial", us_serial / total_steps,
+         f"boards={len(boards)}|slots=1|steps_per_s={sps_serial:.0f}")
+    emit("farm_manager", us_farm / total_steps,
+         f"boards={len(boards)}|slots={len(boards)}"
+         f"|steps_per_s={sps_farm:.0f}"
+         f"|farm_vs_serial={us_serial / us_farm:.2f}x")
+
+    # eviction + requeue must preserve every board's verified outputs
+    def collect(which):
+        sinks = {f"board{i}": [] for i in range(len(boards))}
+        wrapped = {n: (lambda p, r, y, acc=acc: acc.append(np.asarray(y)))
+                   for n, acc in sinks.items()}
+        rep = _run(boards, slots=len(boards), force_evict=which,
+                   sinks=wrapped)
+        return sinks, rep
+
+    base, _ = collect(None)
+    evicted, rep = collect("board1")
+    preserved = all(
+        len(base[n]) == len(evicted[n])
+        and all(np.array_equal(a, b)
+                for a, b in zip(base[n], evicted[n]))
+        for n in base)
+    emit("farm_evict_requeue", 0.0,
+         f"evictions={len(rep['telemetry']['evictions'])}"
+         f"|requeues={rep['jobs']['board1']['requeues']}"
+         f"|outputs_preserved={preserved}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.bench_coverage",      # Fig. 13  — coverage overhead
     "benchmarks.bench_panicroom",     # Table II — portability
     "benchmarks.bench_coemu",         # §IV-A    — verify throughput
+    "benchmarks.bench_farm",          # ZP-Farm  — farm-vs-serial boards
 ]
 
 

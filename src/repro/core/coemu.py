@@ -24,8 +24,16 @@ stops paying two serial syncs per window (``overlap=False`` reproduces the
 serial baseline for benchmarking).
 
 ``verify_subsystems`` is the multi-DUT (ZP-Farm) mode: several
-``decompose.extract_block`` subsystems verify as independent engines
-sharing ONE scheduler pass against boundary traffic captured in situ.
+``decompose.extract_block`` subsystems verify as independent boards. It
+routes through the ``repro.farm`` ``FarmManager`` — one farm job per
+subsystem, placed one-per-device (round-robin on a single device), with
+per-device watchdogs and straggler eviction riding along for free.
+
+``CommitStreamVerifier`` closes the verified-snapshot loop: attached to
+the train loop's checkpoint ``DrainBarrier`` path, it replays the same
+deterministic batch stream through the oracle and compares the drained
+commit FIFO rows window by window — a diverging commit stream raises at
+the drain, which vetoes the checkpoint before it can publish.
 """
 from __future__ import annotations
 
@@ -221,6 +229,64 @@ class CoEmulator:
                    for a, b in zip(leaves1, leaves2))
 
 
+# --------------------------------------------------- checkpoint verifier ---
+class CommitDivergence(RuntimeError):
+    """Raised by CommitStreamVerifier at the drain whose commit rows
+    diverge from the oracle — inside the scheduler's ``on_drain``, this
+    vetoes any DrainBarrier commit (checkpoint save) behind the window."""
+
+    def __init__(self, step: int, layer: int, rel_err: float):
+        super().__init__(
+            f"commit stream diverged at step {step} layer {layer} "
+            f"(rel-err {rel_err:.2e}); checkpoint vetoed")
+        self.step = step
+        self.layer = layer
+        self.rel_err = rel_err
+
+
+class CommitStreamVerifier:
+    """The paper's verified-snapshot workflow, wired into the train loop:
+    a checkpoint may only publish if the host has ACCEPTED every commit up
+    to the boundary.
+
+    Called as the train loop's drain verifier with ``(last_step,
+    records)``: replays its OWN copy of the deterministic batch stream
+    through ``oracle_step`` (eager, step-locked) and compares the drained
+    commit FIFO rows — per-step ``[layer, mean, abs_mean]`` checksums
+    pushed by the P-Shell ingest — against the oracle's
+    ``layer_checksums``. A divergence raises :class:`CommitDivergence`,
+    which the ``WindowScheduler`` barrier semantics turn into a checkpoint
+    veto (the barrier action never runs). Requires a losslessly sized
+    commit FIFO (the ``default_shell_config`` contract); rows beyond what
+    the FIFO kept are not checkable and are skipped.
+    """
+
+    def __init__(self, oracle_step: Callable, state, batches,
+                 layers: int, rtol: float = 1e-5, start_step: int = 0):
+        self.oracle_step = oracle_step
+        self.state = state
+        self.batches = iter(batches)
+        self.L = layers
+        self.rtol = rtol
+        self.step = start_step      # resume: report true global step ids
+
+    def __call__(self, last_step: int, records):
+        rows = np.asarray(records["fifos"]["commits"]["data"], np.float64)
+        steps = rows.shape[0] // self.L
+        for s in range(steps):
+            batch = next(self.batches)
+            self.state, _, aux = self.oracle_step(self.state, batch)
+            exp = np.asarray(layer_checksums(aux), np.float64)   # (L, 2)
+            got = rows[s * self.L:(s + 1) * self.L, 1:]
+            err = _rel_err(got, exp).max(axis=1)                 # (L,)
+            bad = np.nonzero(err > self.rtol)[0]
+            if bad.size:
+                l = int(bad[0])
+                raise CommitDivergence(step=self.step + s, layer=l,
+                                       rel_err=float(err[l]))
+        self.step += steps
+
+
 # ------------------------------------------------------------- multi-DUT ---
 def _activation_checksum(x):
     """(abs-mean, rms) — both O(activation-scale) positive statistics, so
@@ -231,36 +297,23 @@ def _activation_checksum(x):
                       jnp.sqrt(jnp.mean(jnp.square(x)))])
 
 
-def verify_subsystems(params, cfg, rt, xs: Sequence, positions,
-                      layer_idxs: Sequence[int], group_size: int = 2,
-                      rtol: float = 5e-2,
-                      dut_params=None) -> Dict[str, CoEmuReport]:
-    """Multi-DUT (ZP-Farm) mode: verify several extracted subsystems as
-    independent engines sharing ONE scheduler pass.
-
-    For each activation batch in ``xs`` (the "steps"), an in-situ unrolled
-    run over ``params`` captures every block's boundary traffic (the
-    oracle). Each layer in ``layer_idxs`` then becomes one DUT engine — the
-    ``extract_block`` subsystem (from ``dut_params``, defaulting to the
-    oracle's params) replayed standalone over its captured inputs,
-    scan-fused per window — and all engines advance window-by-window
-    through one ``WindowScheduler.run_many`` pass: every board dispatches
-    before any board's previous window is fetched. A divergence localizes a
-    fault to the exact (step, subsystem).
-
-    Note on tolerance: the scan-compiled replay may differ from the eager
-    in-situ capture in low mantissa bits (XLA fusion/reassociation,
-    especially bf16), so comparison is at ``rtol`` — the BITWISE
-    non-interference contract is the eager ``decompose.verify_extraction``
-    path."""
+def subsystem_boards(params, cfg, rt, xs: Sequence, positions,
+                     layer_idxs: Sequence[int], dut_params=None):
+    """Build the multi-DUT farm boards: for each activation batch in ``xs``
+    (the "steps"), an in-situ unrolled run over ``params`` captures every
+    block's boundary traffic (the oracle); each layer in ``layer_idxs``
+    becomes one DUT board — the ``extract_block`` subsystem (from
+    ``dut_params``, defaulting to the oracle's params) replayed standalone
+    over its captured inputs, scan-fused per window. Returns one
+    ``(engine, x_ins, oracle_cks)`` triple per layer (engines are jitted
+    once here, so callers can rerun them without recompiling)."""
     from repro.core.decompose import extract_block, unrolled_capture
 
     captures = [unrolled_capture(params, cfg, x, positions, rt)[1]
                 for x in xs]                       # [step][layer] records
     batch, seq = xs[0].shape[0], xs[0].shape[1]
 
-    clients = []
-    oracle_cks = []                                # per client: (steps, 2)
+    boards = []
     for li in layer_idxs:
         sub = extract_block(dut_params if dut_params is not None else params,
                             cfg, li, rt, batch, seq)
@@ -277,34 +330,89 @@ def verify_subsystems(params, cfg, rt, xs: Sequence, positions,
             return engine
 
         x_ins = [captures[s][li]["x_in"] for s in range(len(xs))]
-        clients.append((make_engine(sub.fn),
-                        iter_windows(x_ins, group_size), None, {}))
-        oracle_cks.append(np.stack([
+        oracle_cks = np.stack([
             np.asarray(_activation_checksum(captures[s][li]["x_out"]),
                        np.float64)
-            for s in range(len(xs))]))
+            for s in range(len(xs))])              # (steps, 2)
+        boards.append((make_engine(sub.fn), x_ins, oracle_cks))
+    return boards
 
-    accs = [_CompareAccumulator(rtol) for _ in layer_idxs]
 
-    def on_drain(k, plan, records, ys):
-        cks_d = np.asarray(ys, np.float64)[:, None, :]   # (g, 1, 2)
-        cks_o = oracle_cks[k][plan.start:plan.start + plan.size][:, None, :]
-        accs[k]._compare(cks_d, cks_o, plan.start)
-        accs[k].steps += cks_d.shape[0]
+def submit_subsystem_jobs(farm, params, cfg, rt, xs: Sequence, positions,
+                          layer_idxs: Sequence[int], group_size: int = 2,
+                          rtol: float = 5e-2, dut_params=None):
+    """Submit one verification FarmJob per extracted subsystem to ``farm``
+    (a ``repro.farm.FarmManager``) and return a zero-arg ``finalize``
+    producing the per-subsystem ``CoEmuReport``\\ s once the farm ran.
 
-    sched = WindowScheduler(interval=max(1, group_size), overlap=True,
-                            drain_fn=None, stack_fn=_stack_on_device)
-    sched.run_many(clients, on_drain=on_drain)
+    Checksum ingestion rides the job's exactly-once ``on_drain`` sink, so
+    an evicted + requeued board's replayed windows are never
+    double-counted. A divergence localizes a fault to the exact (step,
+    subsystem) — it is RECORDED in the report, not raised, so a diverging
+    board never takes down the farm pass."""
+    from repro.farm.manager import FarmJob
 
-    out = {}
-    for k, li in enumerate(layer_idxs):
-        rep = accs[k].report()
-        if rep.first is not None:
-            # the engine sees a single "layer" (itself); report the true id
-            rep.first = Divergence(step=rep.first.step, layer=li,
-                                   rel_err=rep.first.rel_err)
-        out[f"layer{li}"] = rep
-    return out
+    boards = subsystem_boards(params, cfg, rt, xs, positions, layer_idxs,
+                              dut_params=dut_params)
+    accs = []
+    for li, (engine, x_ins, oracle_cks) in zip(layer_idxs, boards):
+        acc = _CompareAccumulator(rtol)
+        accs.append(acc)
+
+        def sink(plan, records, ys, acc=acc, oracle_cks=oracle_cks):
+            cks_d = np.asarray(ys, np.float64)[:, None, :]    # (g, 1, 2)
+            cks_o = oracle_cks[plan.start:plan.start
+                               + plan.size][:, None, :]
+            acc._compare(cks_d, cks_o, plan.start)
+            acc.steps += cks_d.shape[0]
+
+        farm.submit(FarmJob(
+            name=f"layer{li}", engine=engine,
+            windows=list(iter_windows(x_ins, group_size)), shell={},
+            stack_fn=_stack_on_device, on_drain=sink))
+
+    def finalize() -> Dict[str, CoEmuReport]:
+        out = {}
+        for k, li in enumerate(layer_idxs):
+            rep = accs[k].report()
+            if rep.first is not None:
+                # the board sees a single "layer" (itself); report true id
+                rep.first = Divergence(step=rep.first.step, layer=li,
+                                       rel_err=rep.first.rel_err)
+            out[f"layer{li}"] = rep
+        return out
+
+    return finalize
+
+
+def verify_subsystems(params, cfg, rt, xs: Sequence, positions,
+                      layer_idxs: Sequence[int], group_size: int = 2,
+                      rtol: float = 5e-2, dut_params=None,
+                      farm=None) -> Dict[str, CoEmuReport]:
+    """Multi-DUT (ZP-Farm) mode: verify several extracted subsystems as
+    independent boards of one farm pass (see ``submit_subsystem_jobs``).
+    ``farm=None`` builds a dedicated ``FarmManager`` with one slot per
+    subsystem — every board dispatches before any board's previous window
+    is fetched, exactly the paper's board-farm shape.
+
+    Note on tolerance: the scan-compiled replay may differ from the eager
+    in-situ capture in low mantissa bits (XLA fusion/reassociation,
+    especially bf16), so comparison is at ``rtol`` — the BITWISE
+    non-interference contract is the eager ``decompose.verify_extraction``
+    path."""
+    from repro.farm.manager import FarmManager
+
+    # the internal farm disables wall-clock straggler eviction: a library
+    # verification call must be timing-independent (heterogeneous blocks
+    # legitimately differ in window cost); callers who want eviction pass
+    # their own farm
+    mgr = farm if farm is not None else FarmManager(
+        slots=len(layer_idxs), evict_stragglers=False)
+    finalize = submit_subsystem_jobs(
+        mgr, params, cfg, rt, xs, positions, layer_idxs,
+        group_size=group_size, rtol=rtol, dut_params=dut_params)
+    mgr.run()
+    return finalize()
 
 
 def inject_fault(params, cfg, layer: int, scale: float = 100.0):

@@ -32,7 +32,21 @@ shell: the snapshot must survive on the host until its deferred drain.
 ``run_many`` schedules several engines through one pass — the ZP-Farm
 shape: many DUT boards, one host; window *w* of every engine is dispatched
 back-to-back before any engine's window *w-1* results are fetched, so every
-board's compute overlaps every board's drain.
+board's compute overlaps every board's drain. Farm hooks (all optional,
+the bare 4-tuple form is unchanged):
+
+  * per-client plumbing — a :class:`Client` carries its OWN drain_fn /
+    stack_fn / reset, so one pass can mix shell-ful (train, decode) and
+    shell-less (verify) boards;
+  * device-aware dispatch — ``place_fn(k, stack)`` runs right before
+    client *k*'s engine call (the farm device_puts the window payload onto
+    the client's pinned device there), and ``on_dispatch(k, plan, state)``
+    fires right after the dispatch is enqueued;
+  * pluggable completion policy — a :class:`ClientPolicy` is consulted at
+    every round boundary (the farm's drain boundary): ``admit`` grows the
+    pass with new clients, ``evict`` cancels a straggling/faulted client
+    BEFORE its next dispatch (its undrained in-flight window is discarded,
+    never delivered), ``done`` frees the client's device slot.
 """
 from __future__ import annotations
 
@@ -76,6 +90,52 @@ class DrainBarrier:
 
     def fires(self, plan: WindowPlan) -> bool:
         return plan.boundary // self.every > plan.start // self.every
+
+
+_INHERIT = object()         # Client field sentinel: use the scheduler's own
+
+
+@dataclasses.dataclass
+class Client:
+    """One ``run_many`` board with per-client plumbing. Fields left at
+    ``_INHERIT`` fall back to the scheduler's drain_fn/stack_fn/reset, so a
+    bare ``(engine, windows, state, shell)`` tuple and
+    ``Client(engine, windows, state, shell)`` behave identically."""
+    engine: Callable
+    windows: Iterable
+    state: Any = None
+    shell: Any = None
+    drain_fn: Any = _INHERIT
+    stack_fn: Any = _INHERIT
+    reset: Any = _INHERIT
+
+
+class ClientPolicy:
+    """Pluggable client-completion policy for :meth:`WindowScheduler.
+    run_many` (the ZP-Farm manager implements this). The scheduler consults
+    the policy once per scheduling round — a round is one window of every
+    live client, i.e. the farm's drain boundary:
+
+      ``admit(round_idx)`` -> iterable of new clients (tuples or
+          :class:`Client`) appended to the pass — dynamic admission; client
+          indices are assigned in admission order and never reused.
+      ``evict(k)`` -> True to cancel client *k* before its next dispatch.
+          The client's in-flight (undrained) window is DISCARDED, not
+          flushed: an evicted job is requeued and replayed elsewhere, so
+          partial results must never reach ``on_drain`` twice.
+      ``done(k, state, shell)`` — client *k* dispatched its last window and
+          its final drain was delivered; its device slot is free (the
+          admission point for the next queued job).
+    """
+
+    def admit(self, round_idx: int):
+        return ()
+
+    def evict(self, k: int) -> bool:
+        return False
+
+    def done(self, k: int, state, shell):
+        pass
 
 
 def plan_windows(steps: int, interval: int, start: int = 0) -> List[WindowPlan]:
@@ -230,30 +290,77 @@ class WindowScheduler:
         return state, last_ys, shell
 
     # -------------------------------------------------------------- multi --
-    def run_many(self, clients, on_drain: Optional[Callable] = None):
+    def _normalize_client(self, c) -> Client:
+        if not isinstance(c, Client):
+            engine, windows, state, shell = c
+            c = Client(engine, windows, state, shell)
+        drain_fn = self.drain_fn if c.drain_fn is _INHERIT else c.drain_fn
+        stack_fn = self.stack_fn if c.stack_fn is _INHERIT else c.stack_fn
+        reset = self.reset if c.reset is _INHERIT else c.reset
+        if self.overlap and drain_fn is not None and reset is None:
+            if drain_fn is shell_drain:
+                reset = _reset_jitted()
+            else:
+                raise ValueError(
+                    "run_many client with overlap=True and a drain_fn "
+                    "needs a device-side `reset` to double-buffer its "
+                    "shell (see WindowScheduler.__init__)")
+        return dataclasses.replace(c, drain_fn=drain_fn, stack_fn=stack_fn,
+                                   reset=reset)
+
+    def run_many(self, clients, on_drain: Optional[Callable] = None, *,
+                 on_dispatch: Optional[Callable] = None,
+                 place_fn: Optional[Callable] = None,
+                 policy: Optional[ClientPolicy] = None):
         """ZP-Farm pass: ``clients`` is a list of ``(engine, windows,
-        state, shell)``. Window *w* of EVERY client is dispatched before
+        state, shell)`` tuples or :class:`Client`\\ s (per-client drain /
+        stack / reset). Window *w* of EVERY client is dispatched before
         any client's window *w-1* is drained, so each engine's drain
         overlaps every engine's in-flight compute. Clients may have
         different window counts; a finished client's last pending window
         drains in the round it stops dispatching (after every still-alive
         client's dispatch, preserving the dispatch-before-fetch order).
-        ``on_drain(client_idx, plan, records, ys)``. Returns the list of
-        final ``(state, shell)`` per client."""
-        n = len(clients)
-        its = [iter(w) for (_, w, _, _) in clients]
-        engines = [e for (e, _, _, _) in clients]
-        states = [s for (_, _, s, _) in clients]
-        shells = [sh for (_, _, _, sh) in clients]
-        steps = [0] * n
-        indexes = [0] * n
-        pendings: List[Optional[Tuple]] = [None] * n
-        alive = [True] * n
-        while any(alive):
+
+        ``on_drain(client_idx, plan, records, ys)``;
+        ``on_dispatch(client_idx, plan, state)`` fires right after a
+        client's window dispatch is enqueued; ``place_fn(client_idx,
+        stack)`` maps the stacked window payload right before the engine
+        call (device placement); ``policy`` is a :class:`ClientPolicy` for
+        dynamic admission / eviction / slot-free notification. Returns the
+        list of final ``(state, shell)`` per client index (admitted clients
+        included, in admission order)."""
+        cs: List[Client] = [self._normalize_client(c) for c in clients]
+        its = [iter(c.windows) for c in cs]
+        states = [c.state for c in cs]
+        shells = [c.shell for c in cs]
+        steps = [0] * len(cs)
+        indexes = [0] * len(cs)
+        pendings: List[Optional[Tuple]] = [None] * len(cs)
+        alive = [True] * len(cs)
+        rnd = 0
+        while True:
+            if policy is not None:
+                for c in policy.admit(rnd):
+                    c = self._normalize_client(c)
+                    cs.append(c)
+                    its.append(iter(c.windows))
+                    states.append(c.state)
+                    shells.append(c.shell)
+                    steps.append(0)
+                    indexes.append(0)
+                    pendings.append(None)
+                    alive.append(True)
+            if not any(alive):
+                break
+            n = len(cs)
             dispatched = [None] * n
             finished = []
             for k in range(n):
                 if not alive[k]:
+                    continue
+                if policy is not None and policy.evict(k):
+                    alive[k] = False
+                    pendings[k] = None      # discard, never deliver
                     continue
                 try:
                     items = next(its[k])
@@ -263,44 +370,58 @@ class WindowScheduler:
                     continue
                 if not items:
                     continue
-                stack = self.stack_fn(items) if self.stack_fn else items
+                stack = cs[k].stack_fn(items) if cs[k].stack_fn else items
+                if place_fn is not None:
+                    stack = place_fn(k, stack)
                 plan = WindowPlan(index=indexes[k], start=steps[k],
                                   size=len(items))
-                states[k], snap, ys = engines[k](states[k], shells[k], stack)
+                states[k], snap, ys = cs[k].engine(states[k], shells[k],
+                                                   stack)
                 if self.overlap:
-                    shells[k] = self.reset(snap) if self.reset else snap
+                    shells[k] = cs[k].reset(snap) if cs[k].reset else snap
+                if on_dispatch is not None:
+                    on_dispatch(k, plan, states[k])
                 dispatched[k] = (plan, snap, ys)
                 steps[k] += len(items)
                 indexes[k] += 1
             for k in finished:          # after every live client dispatched
-                self._flush(pendings[k], on_drain, client=k)
+                self._flush(pendings[k], on_drain, client=k,
+                            drain_fn=cs[k].drain_fn)
                 pendings[k] = None
+                if policy is not None:
+                    policy.done(k, states[k], shells[k])
             for k in range(n):
                 if dispatched[k] is None:
                     continue
                 if self.overlap:
-                    self._flush(pendings[k], on_drain, client=k)
+                    self._flush(pendings[k], on_drain, client=k,
+                                drain_fn=cs[k].drain_fn)
                     pendings[k] = dispatched[k]
                 else:
                     plan, snap, ys = dispatched[k]
-                    records, shells[k] = self._drain_now(snap)
+                    records, shells[k] = self._drain_now(
+                        snap, drain_fn=cs[k].drain_fn)
                     self._emit(plan, records, ys, on_drain, client=k)
-        for k in range(n):
-            self._flush(pendings[k], on_drain, client=k)
+            rnd += 1
+        for k in range(len(cs)):
+            self._flush(pendings[k], on_drain, client=k,
+                        drain_fn=cs[k].drain_fn)
         return list(zip(states, shells))
 
     # ----------------------------------------------------------- plumbing --
-    def _drain_now(self, snap):
-        if self.drain_fn is None:
+    def _drain_now(self, snap, drain_fn=_INHERIT):
+        drain_fn = self.drain_fn if drain_fn is _INHERIT else drain_fn
+        if drain_fn is None:
             return {}, snap
-        return self.drain_fn(snap)
+        return drain_fn(snap)
 
-    def _flush(self, pending, on_drain, client=None):
+    def _flush(self, pending, on_drain, client=None, drain_fn=_INHERIT):
         if pending is None:
             return
+        drain_fn = self.drain_fn if drain_fn is _INHERIT else drain_fn
         plan, snap, ys = pending
-        if self.drain_fn is not None:
-            records, _ = self.drain_fn(snap)   # snapshot's reset state is
+        if drain_fn is not None:
+            records, _ = drain_fn(snap)        # snapshot's reset state is
         else:                                  # discarded: the live shell
             records = {}                       # was reset on device
         self._emit(plan, records, ys, on_drain, client=client)

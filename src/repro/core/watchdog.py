@@ -4,6 +4,20 @@ The paper's boards carry hardware watchdog timers so a hung DUT can never
 take down the farm; the cluster analogue is worker heartbeats with a
 checkpoint-restart policy and straggler flagging for 1000+-node runs.
 Host-side pure Python; injected clock for deterministic tests.
+
+Two channels per worker, deliberately separate:
+
+  liveness  — ``heartbeat(worker)``: "this worker made progress now".
+              Dead-worker detection compares the last beat against
+              ``timeout_s``.
+  duration  — inter-heartbeat gaps (the default) OR explicit
+              ``observe(worker, dt)`` samples. The farm host loop is
+              lockstep (one Python thread dispatches every board's window
+              back-to-back), so inter-drain gaps are the ROUND time —
+              identical for every board and useless for telling boards
+              apart. The farm therefore observes each board's own dispatch
+              duration explicitly and heartbeats with ``gap=False`` so the
+              liveness beat does not pollute the duration stream.
 """
 from __future__ import annotations
 
@@ -20,28 +34,66 @@ class Watchdog:
         self.durations: Dict[str, deque] = defaultdict(
             lambda: deque(maxlen=64))
 
-    def heartbeat(self, worker: str = "w0"):
+    def heartbeat(self, worker: str = "w0", gap: bool = True):
+        """Liveness beat. ``gap=True`` (default) also records the gap since
+        the worker's previous beat as a duration sample; ``gap=False`` is a
+        pure liveness beat for callers that feed durations via
+        :meth:`observe` instead (the farm's lockstep drain loop)."""
         now = self.clock()
-        if worker in self.last_beat:
+        if gap and worker in self.last_beat:
             self.durations[worker].append(now - self.last_beat[worker])
         self.last_beat[worker] = now
+
+    def observe(self, worker: str, duration_s: float):
+        """Record an explicitly measured duration sample (e.g. one window's
+        dispatch time on one board) without touching liveness state."""
+        self.durations[worker].append(duration_s)
+
+    def forget(self, worker: str):
+        """Drop a worker's history. Eviction/requeue: the slot's next
+        tenant must not inherit the evicted straggler's durations (it
+        would be flagged on arrival)."""
+        self.last_beat.pop(worker, None)
+        self.durations.pop(worker, None)
 
     def dead_workers(self) -> List[str]:
         now = self.clock()
         return [w for w, t in self.last_beat.items()
                 if now - t > self.timeout_s]
 
-    def stragglers(self, factor: float = 2.0) -> List[str]:
-        """Workers whose median step duration exceeds factor x fleet median."""
+    def stragglers(self, factor: float = 2.0, min_fleet: int = 2,
+                   min_s: float = 0.0) -> List[str]:
+        """Workers whose median duration exceeds ``factor`` x the fleet
+        reference.
+
+        Semantics (the ZP-Farm eviction contract):
+          * a worker with NO duration samples (at most one gap-heartbeat
+            ever, no ``observe`` calls) cannot be judged and is never
+            flagged — absence of evidence is not slowness;
+          * straggling is RELATIVE: with fewer than ``min_fleet`` sampled
+            workers there is no fleet to compare against, so the answer is
+            [] (a single worker is never a straggler of itself — use
+            ``dead_workers`` for absolute hang detection);
+          * the fleet reference is the LOWER median of per-worker medians:
+            with an even worker count the upper median would let a dominant
+            straggler drag the reference up and mask itself (in a
+            two-worker farm the upper median IS the straggler, making
+            detection impossible);
+          * ``min_s`` is an absolute floor: a worker whose median is below
+            it is never flagged, however large the RATIO — sub-millisecond
+            dispatch costs are all timer jitter, and evicting a board that
+            answers in microseconds buys nothing.
+        """
         meds = {}
         for w, d in self.durations.items():
             if d:
                 s = sorted(d)
                 meds[w] = s[len(s) // 2]
-        if len(meds) < 2:
+        if len(meds) < max(2, min_fleet):
             return []
-        fleet = sorted(meds.values())[len(meds) // 2]
-        return [w for w, m in meds.items() if m > factor * fleet]
+        fleet = sorted(meds.values())[(len(meds) - 1) // 2]
+        return [w for w, m in meds.items()
+                if m > factor * fleet and m >= min_s]
 
     def should_restart(self) -> bool:
         return bool(self.dead_workers())

@@ -1,0 +1,337 @@
+"""FarmManager: the FireSim-manager analog for multi-device co-emulation.
+
+The paper's end state is a *farm* of scaled-down DUTs — many independently
+prototyped subsystems co-emulated concurrently behind one host. This
+module is the orchestration layer over ``WindowScheduler.run_many``:
+
+  * a job queue of :class:`FarmJob`\\ s — an engine + a replayable window
+    stream + an expected-output verifier;
+  * device placement — one job per :class:`DeviceSlot`
+    (``placement.enumerate_slots``: one slot per device, round-robin
+    virtual slots on a single-device host), state/shell pinned with
+    ``jax.device_put`` at admission and every window payload routed to the
+    job's device through the scheduler's ``place_fn`` hook;
+  * dynamic admission at drain boundaries — a queued job enters the pass
+    the round after a slot frees (the scheduler's ``ClientPolicy.done``);
+  * per-slot watchdog — liveness heartbeats fire from ``on_drain``
+    (``gap=False``) and each window's dispatch cost feeds
+    ``Watchdog.observe`` (the lockstep host loop makes inter-drain gaps
+    identical across slots, so dispatch cost is the per-board signal —
+    see ``core/watchdog.py``);
+  * straggler eviction + requeue — ``Watchdog.stragglers`` flags a slot,
+    its job is cancelled BEFORE its next dispatch (the in-flight window is
+    discarded by the scheduler, partial outputs dropped here) and requeued
+    onto a different slot, where its window stream replays from the start —
+    so an evicted job's delivered outputs are bit-identical to an
+    uninterrupted run (tests assert this);
+  * drain-veto fault handling — a job's ``verify`` raising at a drain
+    counts a veto, faults the job, and takes the same evict + requeue
+    path (a board whose outputs are wrong is as evictable as a slow one).
+
+Delivery is exactly-once: a job's ``on_drain`` sink sees its windows in
+window order only after the job COMPLETES, so a stateful collector (e.g. a
+co-emulation compare accumulator) never double-ingests a replayed window.
+
+Caveat for donating engines: requeue replays from ``FarmJob.state``; on
+backends where donation is real, pass ``state``/``shell`` as zero-arg
+factories so each attempt gets fresh buffers (on CPU donation is a no-op).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.schedule import Client, ClientPolicy, WindowScheduler
+from repro.core.watchdog import Watchdog
+from repro.farm.placement import (DeviceSlot, enumerate_slots, place,
+                                  place_stack)
+from repro.farm.telemetry import FarmTelemetry
+
+
+class FarmError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FarmJob:
+    """One farm workload. ``windows`` is a list of per-step item lists (or
+    a zero-arg factory returning a fresh iterable — required if the stream
+    cannot be materialized) so eviction can replay it from the start.
+    ``verify(plan, records, ys)`` raises to veto a window (stateless — it
+    re-runs on replay); ``on_drain(plan, records, ys)`` is the
+    exactly-once, in-order sink delivered at completion. ``drain_fn`` /
+    ``stack_fn`` / ``reset`` are the per-client scheduler plumbing
+    (``None`` = shell-less)."""
+    name: str
+    engine: Callable
+    windows: Any
+    state: Any = None
+    shell: Any = None
+    verify: Optional[Callable] = None
+    on_drain: Optional[Callable] = None
+    drain_fn: Optional[Callable] = None
+    stack_fn: Optional[Callable] = None
+    reset: Optional[Callable] = None
+    capture: Any = None                 # roofline.WindowCapture, optional
+    max_requeues: int = 1
+
+    # ----- runtime bookkeeping (owned by the manager) -----
+    requeues: int = dataclasses.field(default=0, init=False)
+    attempts: int = dataclasses.field(default=0, init=False)
+    status: str = dataclasses.field(default="queued", init=False)
+    error: Optional[str] = dataclasses.field(default=None, init=False)
+    last_slot: Optional[str] = dataclasses.field(default=None, init=False)
+    windows_drained: int = dataclasses.field(default=0, init=False)
+
+    def _window_iter(self):
+        w = self.windows() if callable(self.windows) else self.windows
+        return iter(w)
+
+    def _initial(self, attr):
+        v = getattr(self, attr)
+        return v() if callable(v) else v
+
+
+class _Run:
+    """One admission of a job onto a slot (client index k in the pass)."""
+
+    def __init__(self, job: FarmJob, slot: DeviceSlot):
+        self.job = job
+        self.slot = slot
+        self.outputs: List = []
+        self.fault: Optional[BaseException] = None
+
+
+class FarmManager(ClientPolicy):
+    """Job queue + placement + watchdog + eviction over one
+    ``WindowScheduler.run_many`` pass. ``slots`` may be a slot list, an
+    int (minimum concurrency; virtual slots fill in on single-device
+    hosts), or None (``max(min_slots, n_devices)``, capped at the number
+    of submitted jobs)."""
+
+    def __init__(self, slots: Any = None, min_slots: int = 3,
+                 scheduler: Optional[WindowScheduler] = None,
+                 watchdog: Optional[Watchdog] = None,
+                 straggler_factor: float = 3.0,
+                 straggler_min_s: float = 0.01,
+                 evict_stragglers: bool = True,
+                 telemetry: Optional[FarmTelemetry] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self._slots_arg = slots
+        self.min_slots = min_slots
+        self.sched = scheduler or WindowScheduler(
+            interval=1, overlap=True, drain_fn=None, stack_fn=None)
+        self.wd = watchdog or Watchdog(timeout_s=600.0)
+        self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
+        self.evict_stragglers = evict_stragglers
+        self.telemetry = telemetry or FarmTelemetry(clock=clock)
+        self.clock = clock
+
+        self.queue: deque = deque()
+        self.jobs: List[FarmJob] = []
+        self.slots: List[DeviceSlot] = []
+        self.results: Dict[str, Any] = {}       # name -> (state, shell)
+        self.outputs: Dict[str, List] = {}      # name -> [(plan, rec, ys)]
+        self._running: Dict[int, _Run] = {}     # client idx -> run
+        self._free: List[DeviceSlot] = []
+        self._avoid: Dict[str, str] = {}        # job -> slot to avoid
+        self._evicted: set = set()              # client idxs, confirmed out
+        self._force: set = set()                # job names, test/CLI hook
+        self._pre: Dict[int, float] = {}        # client idx -> t(place_fn)
+        self._next_idx = 0
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, job: FarmJob) -> FarmJob:
+        self.jobs.append(job)
+        self.queue.append(job)
+        return job
+
+    def force_evict(self, job_name: str):
+        """Mark a job for eviction at the next drain boundary (the
+        deterministic test/CLI path — the watchdog path is wall-time)."""
+        self._force.add(job_name)
+
+    # ------------------------------------------------------------ running --
+    def run(self, strict: bool = True) -> dict:
+        if not self.jobs:
+            return {"jobs": {}, "telemetry": self.telemetry.report()}
+        if isinstance(self._slots_arg, int):
+            self.slots = enumerate_slots(min_slots=self._slots_arg)
+        elif self._slots_arg is not None:
+            self.slots = list(self._slots_arg)
+        else:
+            import jax
+            self.slots = enumerate_slots(min_slots=min(
+                len(self.queue), max(self.min_slots, len(jax.devices()))))
+        self._free = list(self.slots)
+        # the initial client list MUST be empty: every client enters via
+        # admit(), so the scheduler's positional indices stay in lockstep
+        # with _next_idx and the callbacks route to the right _Run
+        self.sched.run_many([], on_drain=self._on_drain,
+                            on_dispatch=self._on_dispatch,
+                            place_fn=self._place, policy=self)
+        report = self.report()
+        if strict:
+            failed = [n for n, j in report["jobs"].items()
+                      if j["status"] != "done"]
+            if failed:
+                raise FarmError(f"farm jobs failed verification: {failed}")
+        return report
+
+    def report(self) -> dict:
+        return {
+            "jobs": {j.name: {"status": j.status,
+                              "windows": j.windows_drained,
+                              "requeues": j.requeues,
+                              "slot": j.last_slot,
+                              "error": j.error} for j in self.jobs},
+            "telemetry": self.telemetry.report(),
+        }
+
+    # ----------------------------------------------- ClientPolicy protocol --
+    def admit(self, round_idx: int):
+        self._process_evictions()
+        admissions = []
+        deferred = []
+        while self.queue and self._free:
+            job = self.queue.popleft()
+            slot = self._pick_slot(self._avoid.get(job.name))
+            if slot is None:        # only its old slot is free: wait for a
+                deferred.append(job)  # DIFFERENT one (requeue contract)
+                continue
+            self._avoid.pop(job.name, None)
+            admissions.append(self._admit_one(job, slot))
+        self.queue.extendleft(reversed(deferred))
+        if not admissions and not self._running and self.queue:
+            # nothing running, nothing admitted: no other slot will ever
+            # free, so the avoid preference must yield (progress guarantee)
+            job = self.queue.popleft()
+            self._avoid.pop(job.name, None)
+            admissions.append(self._admit_one(job, self._free.pop(0)))
+        if self._running:
+            self.telemetry.occupancy(len(self._running), len(self.slots))
+        return admissions
+
+    def evict(self, k: int) -> bool:
+        return k in self._evicted
+
+    def done(self, k: int, state, shell):
+        run = self._running.pop(k)
+        job = run.job
+        self._free.append(run.slot)
+        if run.fault is not None:
+            self._requeue_or_fail(run, f"drain veto: {run.fault}")
+            return
+        self._force.discard(job.name)   # a stale mark must not outlive us
+        job.status = "done"
+        job.windows_drained = len(run.outputs)
+        self.results[job.name] = (state, shell)
+        self.outputs[job.name] = run.outputs
+        if job.on_drain is not None:
+            for plan, records, ys in run.outputs:   # exactly-once, in order
+                job.on_drain(plan, records, ys)
+
+    # -------------------------------------------------- scheduler callbacks --
+    def _place(self, k: int, stack):
+        self._pre[k] = self.clock()
+        return place_stack(stack, self._running[k].slot)
+
+    def _on_dispatch(self, k: int, plan, state):
+        run = self._running[k]
+        cost = self.clock() - self._pre.pop(k, self.clock())
+        if plan.index > 0:
+            # window 0 of an attempt pays jit compilation (the farm analog
+            # of bitstream build time) — a known one-off, not slowness
+            self.wd.observe(run.slot.name, cost)
+        self.telemetry.dispatch(run.slot.name, self._key(run, plan), cost)
+        if run.job.capture is not None:
+            run.job.capture.on_dispatch(plan, state)
+
+    def _on_drain(self, k: int, plan, records, ys):
+        run = self._running[k]
+        self.wd.heartbeat(run.slot.name, gap=False)
+        self.telemetry.drain(run.slot.name, self._key(run, plan))
+        if run.job.capture is not None:
+            run.job.capture.on_drain(plan, records, ys)
+        if run.job.verify is not None and run.fault is None:
+            try:
+                run.job.verify(plan, records, ys)
+            except Exception as e:          # noqa: BLE001 — veto, not crash
+                self.telemetry.veto(run.slot.name)
+                run.fault = e
+        run.outputs.append((plan, records, ys))
+
+    # ----------------------------------------------------------- internals --
+    @staticmethod
+    def _key(run: _Run, plan):
+        return (run.job.name, run.job.attempts, plan.index)
+
+    def _pick_slot(self, avoid: Optional[str]) -> Optional[DeviceSlot]:
+        for i, s in enumerate(self._free):
+            if s.name != avoid:
+                return self._free.pop(i)
+        if len(self.slots) == 1 and self._free:
+            return self._free.pop(0)    # single-slot farm: no alternative
+        return None
+
+    def _admit_one(self, job: FarmJob, slot: DeviceSlot) -> Client:
+        job.attempts += 1
+        job.status = "running"
+        job.last_slot = slot.name
+        k = self._next_idx
+        self._next_idx += 1
+        self._running[k] = _Run(job, slot)
+        self.wd.heartbeat(slot.name, gap=False)
+        return Client(engine=job.engine, windows=job._window_iter(),
+                      state=place(job._initial("state"), slot),
+                      shell=place(job._initial("shell"), slot),
+                      drain_fn=job.drain_fn, stack_fn=job.stack_fn,
+                      reset=job.reset)
+
+    def _process_evictions(self):
+        """Drain-boundary eviction sweep: watchdog stragglers + forced
+        marks + drain-veto faults all take the same evict/requeue path."""
+        marks: Dict[int, str] = {}
+        if self.evict_stragglers and len(self._running) > 1:
+            slow = set(self.wd.stragglers(self.straggler_factor,
+                                          min_s=self.straggler_min_s))
+            for k, run in self._running.items():
+                if run.slot.name in slow:
+                    marks.setdefault(k, "straggler")
+        for k, run in self._running.items():
+            if run.job.name in self._force:
+                marks.setdefault(k, "forced")
+            if run.fault is not None:
+                marks.setdefault(k, f"drain veto: {run.fault}")
+        for k, why in marks.items():
+            run = self._running[k]
+            if (run.fault is None
+                    and run.job.requeues >= run.job.max_requeues):
+                continue                # budget spent: let it limp home
+            self._evicted.add(k)
+            self._running.pop(k)
+            self._free.append(run.slot)
+            self._requeue_or_fail(run, why)
+
+    def _requeue_or_fail(self, run: _Run, why: str):
+        """Shared evict/fault tail (boundary sweep AND the done()-path
+        fault on a job's final window): clear the slot's duration history
+        so its next tenant is not judged against the evicted job's, drop
+        any stale force mark, then requeue or fail on budget."""
+        job = run.job
+        self.wd.forget(run.slot.name)
+        self._force.discard(job.name)
+        self.telemetry.eviction(run.slot.name, job.name, why)
+        if job.capture is not None:
+            job.capture.reset()
+        if job.requeues < job.max_requeues:
+            job.requeues += 1
+            job.status = "queued"
+            self._avoid[job.name] = run.slot.name
+            self.queue.appendleft(job)      # partial outputs discarded
+        else:
+            job.status = "failed"
+            job.error = why

@@ -1,0 +1,64 @@
+"""Device placement for the ZP-Farm (the FireSim run-farm mapping step).
+
+A *slot* is one co-emulation seat: a JAX device plus a stable name the
+watchdog and telemetry key on. On a multi-device host there is one slot
+per device (one board per FPGA); on a single-device host (CPU CI) the farm
+falls back to ``min_slots`` round-robin VIRTUAL slots sharing that device,
+so admission, per-slot heartbeats, straggler eviction, and requeue all
+exercise the same code paths the real farm runs — the scheduler already
+interleaves every client's dispatch on one backend.
+
+Jobs are pinned at admission: state and shell are ``jax.device_put`` onto
+the slot's device once, and every window's stacked payload follows through
+the scheduler's ``place_fn`` dispatch hook, so a job's working set stays
+device-resident across windows (the FASE lesson: never re-upload what the
+board already holds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSlot:
+    """One farm seat: ``name`` is the watchdog/telemetry worker key
+    (``cpu:0``, or ``cpu:0#2`` for the third virtual seat of a shared
+    device); ``device`` is the backing ``jax.Device``."""
+    name: str
+    device: Any
+    index: int
+
+
+def enumerate_slots(min_slots: int = 1,
+                    devices: Optional[Sequence] = None) -> List[DeviceSlot]:
+    """One slot per available device; when the host has fewer devices than
+    ``min_slots`` (single-device CPU CI), extra virtual slots round-robin
+    over the real devices so every farm code path still runs."""
+    devices = list(devices) if devices is not None else list(jax.devices())
+    if not devices:
+        raise RuntimeError("no jax devices to build a farm on")
+    n = max(len(devices), min_slots)
+    slots = []
+    for i in range(n):
+        d = devices[i % len(devices)]
+        base = f"{getattr(d, 'platform', 'dev')}:{getattr(d, 'id', i)}"
+        name = base if n <= len(devices) else f"{base}#{i // len(devices)}"
+        slots.append(DeviceSlot(name=name, device=d, index=i))
+    return slots
+
+
+def place(tree, slot: DeviceSlot):
+    """Pin a job's state/shell pytree onto its slot's device (admission
+    time; stays resident across windows)."""
+    if tree is None:
+        return None
+    return jax.device_put(tree, slot.device)
+
+
+def place_stack(stack, slot: DeviceSlot):
+    """Device-aware dispatch hook: move one window's stacked payload onto
+    the job's device (``run_many``'s ``place_fn``)."""
+    return jax.device_put(stack, slot.device)

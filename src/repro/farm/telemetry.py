@@ -1,0 +1,96 @@
+"""Farm telemetry: per-device window latency, occupancy, drain vetoes.
+
+Aggregates every board's signals into ONE farm report (the FireSim
+manager's consolidated run-farm status): per-slot window latency
+(dispatch-to-drain, pipelined — the drain of window *i* lands while window
+*i+1* is in flight, so this is "time until the window's results were in
+hand"), per-slot dispatch cost (the engine-call wall time the straggler
+detector keys on), occupancy sampled at every drain boundary, drain-veto
+counts (a job verifier rejecting a window), and the eviction log.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Callable, Dict, List, Tuple
+
+
+def _stats(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"n": 0}
+    s = sorted(xs)
+    return {"n": len(xs),
+            "mean": sum(xs) / len(xs),
+            "p50": s[len(s) // 2],
+            "max": s[-1]}
+
+
+class FarmTelemetry:
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self.window_ms = defaultdict(list)      # slot -> drain latencies
+        self.dispatch_ms = defaultdict(list)    # slot -> engine-call cost
+        self.windows = defaultdict(int)         # slot -> drained windows
+        self.vetoes = defaultdict(int)          # slot -> drain vetoes
+        self.evictions: List[Tuple[str, str, str]] = []  # (slot, job, why)
+        self.occupancy_samples: List[Tuple[int, int]] = []
+        self._t: Dict[Tuple[str, object], float] = {}
+
+    # ------------------------------------------------------------ events --
+    def dispatch(self, slot: str, key, cost_s: float):
+        """One window enqueued on ``slot``: start its drain-latency clock
+        and record the dispatch (engine-call) cost."""
+        self._t[(slot, key)] = self.clock()
+        self.dispatch_ms[slot].append(cost_s * 1e3)
+
+    def drain(self, slot: str, key):
+        t0 = self._t.pop((slot, key), None)
+        if t0 is not None:
+            self.window_ms[slot].append((self.clock() - t0) * 1e3)
+        self.windows[slot] += 1
+
+    def veto(self, slot: str):
+        self.vetoes[slot] += 1
+
+    def eviction(self, slot: str, job: str, why: str):
+        self.evictions.append((slot, job, why))
+
+    def occupancy(self, active: int, total: int):
+        self.occupancy_samples.append((active, total))
+
+    # ------------------------------------------------------------ report --
+    def report(self) -> dict:
+        devices = {}
+        for slot in sorted(set(self.windows) | set(self.dispatch_ms)):
+            devices[slot] = {
+                "windows": self.windows.get(slot, 0),
+                "window_ms": _stats(self.window_ms.get(slot, [])),
+                "dispatch_ms": _stats(self.dispatch_ms.get(slot, [])),
+                "drain_vetoes": self.vetoes.get(slot, 0),
+            }
+        occ = self.occupancy_samples
+        return {
+            "devices": devices,
+            "occupancy_mean": (sum(a / t for a, t in occ if t) / len(occ)
+                               if occ else 0.0),
+            "occupancy_peak": max((a for a, _ in occ), default=0),
+            "slots": max((t for _, t in occ), default=0),
+            "drain_vetoes": sum(self.vetoes.values()),
+            "evictions": [{"slot": s, "job": j, "why": w}
+                          for s, j, w in self.evictions],
+        }
+
+    def summary(self) -> str:
+        r = self.report()
+        lines = [f"farm: {r['slots']} slots, "
+                 f"occupancy mean {r['occupancy_mean']:.2f} "
+                 f"peak {r['occupancy_peak']}, "
+                 f"{r['drain_vetoes']} drain vetoes, "
+                 f"{len(r['evictions'])} evictions"]
+        for slot, d in r["devices"].items():
+            w = d["window_ms"]
+            lines.append(
+                f"  {slot}: {d['windows']} windows"
+                + (f", drain p50 {w['p50']:.1f}ms max {w['max']:.1f}ms"
+                   if w["n"] else ""))
+        return "\n".join(lines)

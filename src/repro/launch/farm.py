@@ -1,0 +1,193 @@
+"""ZP-Farm CLI: a mixed co-emulation workload through one FarmManager.
+
+The paper's end state — a farm of scaled-down DUTs behind one host — as an
+executable: a TRAIN engine (fused clock-gated windows, P-Shell commit
+stream), a DECODE engine (scan-fused autoregressive windows, telemetry
+FIFO), and N VERIFY boards (extracted subsystems replaying captured
+boundary traffic) all share one farm pass: device placement (round-robin
+virtual slots on a single-device host), dynamic admission at drain
+boundaries, per-slot watchdogs, straggler eviction + requeue, and one
+aggregated telemetry report.
+
+  PYTHONPATH=src python -m repro.launch.farm --steps 8
+  PYTHONPATH=src python -m repro.launch.farm --steps 8 --synthetic-straggler
+
+``--synthetic-straggler`` slows one verify board down and force-marks it
+for eviction at the next drain boundary (the deterministic CI path; the
+wall-clock watchdog path is exercised by tests/test_farm.py). The run
+exits non-zero unless every job completes verified — and, when a straggler
+was injected, unless it was actually evicted, requeued, and still
+delivered correct outputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.core import plan_windows
+from repro.core.commit import default_shell_config, make_ingest
+from repro.core.pshell import PShell, drain, shell_init, stack_batches
+from repro.core.coemu import submit_subsystem_jobs
+from repro.data import SyntheticPipeline
+from repro.farm import FarmJob, FarmManager
+from repro.launch.serve import decode_shell_config, make_decode_engine
+from repro.models import build_model
+from repro.models.runtime import Runtime
+from repro.roofline import WindowCapture
+from repro.serve import make_prefill_step
+from repro.train.optim import OptConfig
+from repro.train.step import init_state, make_group_step
+from repro.utils import dtype_of
+
+
+def submit_train_job(mgr, cfg, steps, interval, batch=2, seq=16, seed=0,
+                     capture=None):
+    """Fused train engine as a farm job: P-Shell drain + stack_batches per
+    window (donate=False so requeue can replay from the initial state)."""
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    ingest = make_ingest(cfg)
+    shell = PShell(default_shell_config(cfg, sample_interval=interval),
+                   ingest)
+    engine = shell.compile_group(
+        make_group_step(model, OptConfig(), ingest=ingest), donate=False)
+    pipe = SyntheticPipeline(cfg, batch, seq, seed=seed)
+    windows = [[next(pipe) for _ in range(p.size)]
+               for p in plan_windows(steps, interval)]
+    pipe.close()
+    losses: list = []
+
+    def sink(plan, records, metrics):
+        losses.extend(np.asarray(metrics["loss"], np.float32).tolist())
+
+    state = init_state(model, jax.random.key(seed))
+    if capture is not None:
+        capture.attach_cost(engine, state, shell.init(),
+                            stack_batches(windows[0]),
+                            window_size=len(windows[0]))
+    mgr.submit(FarmJob(
+        name="train", engine=engine, windows=windows,
+        state=state, shell=shell.init(),
+        drain_fn=drain, stack_fn=stack_batches, on_drain=sink,
+        capture=capture))
+    return losses
+
+
+def submit_decode_job(mgr, cfg, gen, interval, batch=2, prompt_len=16,
+                      seed=0):
+    """Scan-fused decode engine as a farm job (prefill runs up front; the
+    farm schedules the windowed decode with its telemetry shell)."""
+    from repro.data.pipeline import make_batch_fn
+
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(seed))
+    bf = make_batch_fn(cfg, batch, prompt_len, seed)
+    b = {k: jnp.asarray(v) for k, v in bf(0).items() if k != "labels"}
+    max_len = prompt_len + (cfg.num_patches if cfg.family == "vlm" else 0) \
+        + gen + 8
+    cache, logits = jax.jit(make_prefill_step(model, max_len))(params, b)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    engine = make_decode_engine(model, params, donate=False)
+    windows = [list(range(p.start, p.boundary))
+               for p in plan_windows(gen - 1, interval)]
+    toks: list = [np.asarray(tok)]
+
+    def sink(plan, records, ys):
+        toks.append(np.asarray(ys)[:, :, 0].T)
+
+    mgr.submit(FarmJob(
+        name="decode", engine=engine, windows=windows,
+        state=(cache, tok), shell=shell_init(decode_shell_config(interval)),
+        drain_fn=drain, stack_fn=stack_batches, on_drain=sink))
+    return toks
+
+
+def run_farm(arch: str, steps: int, slots, interval: int = 2,
+             synthetic_straggler: bool = False, straggler_factor: float = 6.0,
+             roofline: bool = False, seed: int = 0) -> dict:
+    cfg = get_smoke_config(arch)
+    mgr = FarmManager(slots=slots, straggler_factor=straggler_factor)
+
+    capture = WindowCapture() if roofline else None
+    losses = submit_train_job(mgr, cfg, steps, interval, seed=seed,
+                              capture=capture)
+    toks = submit_decode_job(mgr, cfg, gen=steps, interval=interval,
+                             seed=seed)
+
+    model = build_model(cfg, Runtime())
+    params = model.init(jax.random.key(seed))
+    B, S = 2, 16
+    n_verify = max(2, steps // 4)
+    xs = [jax.random.normal(jax.random.key(i), (B, S, cfg.d_model))
+          .astype(dtype_of(cfg.dtype)) for i in range(n_verify)]
+    pos = jnp.tile(jnp.arange(S, dtype=jnp.int32)[None], (B, 1))
+    finalize = submit_subsystem_jobs(mgr, params, cfg, Runtime(), xs, pos,
+                                     layer_idxs=[0, 1],
+                                     group_size=interval)
+
+    straggler = None
+    if synthetic_straggler:
+        straggler = mgr.jobs[-1]        # last verify board
+        inner = straggler.engine
+
+        def slow_engine(state, shell, stack):
+            time.sleep(0.15)            # a board gone slow
+            return inner(state, shell, stack)
+
+        straggler.engine = slow_engine
+        mgr.force_evict(straggler.name)
+
+    report = mgr.run(strict=False)
+    reps = finalize()
+
+    out = {
+        "jobs": report["jobs"],
+        "telemetry": report["telemetry"],
+        "train": {"steps": len(losses),
+                  "loss_first": losses[0] if losses else None,
+                  "loss_last": losses[-1] if losses else None},
+        "decode": {"tokens": int(np.concatenate(toks, axis=1).size)},
+        "verify": {k: r.summary() for k, r in reps.items()},
+    }
+    if capture is not None:
+        out["roofline"] = capture.report()
+
+    ok = all(j["status"] == "done" for j in report["jobs"].values())
+    ok = ok and not any(r.diverged for r in reps.values())
+    if synthetic_straggler:
+        evicted = {e["job"] for e in report["telemetry"]["evictions"]}
+        ok = ok and straggler.name in evicted \
+            and report["jobs"][straggler.name]["requeues"] >= 1
+    out["ok"] = ok
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="granite-8b")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--sample-interval", type=int, default=2)
+    ap.add_argument("--synthetic-straggler", action="store_true")
+    ap.add_argument("--straggler-factor", type=float, default=6.0)
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args()
+
+    out = run_farm(args.arch, args.steps, args.slots,
+                   interval=args.sample_interval,
+                   synthetic_straggler=args.synthetic_straggler,
+                   straggler_factor=args.straggler_factor,
+                   roofline=args.roofline)
+    print(json.dumps(out, indent=1, default=float))
+    if not out["ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -43,11 +43,12 @@ def decode_shell_config(sample_interval: int) -> ShellConfig:
         sample_interval=sample_interval)
 
 
-def make_decode_engine(model, params):
+def make_decode_engine(model, params, donate: bool = True):
     """Scheduler engine for decode: state=(cache, last_token); scans one
     decode step per window slot, pushing telemetry into the shell. Donates
     the cache/token state ONLY — the shell snapshot must survive on the
-    host until its overlapped drain."""
+    host until its overlapped drain. ``donate=False`` keeps the initial
+    state alive (the farm's requeue path replays from it)."""
     def engine(state, shell, idx_stack):
         def body(carry, idx):
             cache, tok, sh = carry
@@ -64,7 +65,7 @@ def make_decode_engine(model, params):
             body, (state[0], state[1], shell), idx_stack)
         return (cache, tok), shell, toks
 
-    return jax.jit(engine, donate_argnums=(0,))
+    return jax.jit(engine, donate_argnums=(0,) if donate else ())
 
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,

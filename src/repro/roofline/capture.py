@@ -1,0 +1,142 @@
+"""Scheduler-driven roofline capture (ROADMAP item).
+
+The static roofline (``roofline/compose.py``) predicts per-step cost from
+dry-run lowerings; this module closes the loop with MEASURED windows: an
+``on_dispatch``/``on_drain`` callback pair attachable to any
+``WindowScheduler`` client — train, verify, serve, or any farm job —
+records each window's wall time (dispatch-to-drain, pipelined) and pairs
+it with the window dispatch's HLO cost from the compiled engine's
+``cost_analysis``, so every windowed workload emits (HLO cost, measured
+time) rows into the roofline composer without a bespoke harness.
+
+Wall-time semantics under overlap: the drain of window *i* runs after
+window *i+1*'s dispatch, so a row's ``wall_s`` is "time until window *i*'s
+results were in hand" — the honest pipelined number, matching the serve
+client's latency definition. Achieved-flops rates derived from it are a
+LOWER bound on device throughput.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.roofline.hw import Hardware, HW_V5E
+
+
+def engine_cost(jitted_engine, *sample_args) -> Dict[str, float]:
+    """HLO cost of one window dispatch: lower + compile the jitted engine
+    on sample args and read ``cost_analysis`` (flops / bytes accessed).
+    Nothing executes — this is the dry-run path the static roofline uses."""
+    compiled = jitted_engine.lower(*sample_args).compile()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # older jaxlibs return [dict]
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", 0) or 0),
+            "bytes": float(ca.get("bytes accessed", 0) or 0)}
+
+
+class WindowCapture:
+    """Per-window (HLO cost, measured wall time) recorder.
+
+    Attach to a scheduler run via :meth:`callbacks` (chains with existing
+    hooks), or hand it to a ``FarmJob(capture=...)`` — the farm fires the
+    pair per window and calls :meth:`reset` on eviction so a requeued
+    job's replayed windows are not double-recorded.
+
+    Cost attribution: :meth:`attach_cost` records the HLO cost of one
+    full-size window dispatch (and the window size it was measured at);
+    tail windows scale linearly by size. Without a cost source the rows
+    still carry wall times (cost fields stay None).
+    """
+
+    def __init__(self, hw: Hardware = HW_V5E,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.hw = hw
+        self.clock = clock
+        self.rows: List[Dict[str, Any]] = []
+        self._t: Dict[int, float] = {}
+        self._cost: Optional[Dict[str, float]] = None
+        self._cost_window: int = 0
+
+    # ------------------------------------------------------------- cost ---
+    def attach_cost(self, jitted_engine, *sample_args,
+                    window_size: int = 1):
+        """Record the per-window HLO cost from the engine's compiled
+        lowering (``window_size`` = steps in the sample window, for tail
+        scaling)."""
+        self.set_cost(engine_cost(jitted_engine, *sample_args),
+                      window_size=window_size)
+        return self
+
+    def set_cost(self, cost: Dict[str, float], window_size: int = 1):
+        self._cost = dict(cost)
+        self._cost_window = max(1, window_size)
+        return self
+
+    # -------------------------------------------------------- callbacks ---
+    def on_dispatch(self, plan, state):
+        self._t[plan.index] = self.clock()
+
+    def on_drain(self, plan, records, ys):
+        t0 = self._t.pop(plan.index, None)
+        row: Dict[str, Any] = {
+            "window": plan.index, "start": plan.start, "size": plan.size,
+            "wall_s": None if t0 is None else self.clock() - t0,
+            "flops": None, "bytes": None,
+        }
+        if self._cost is not None:
+            scale = plan.size / self._cost_window
+            row["flops"] = self._cost["flops"] * scale
+            row["bytes"] = self._cost["bytes"] * scale
+        self.rows.append(row)
+
+    def callbacks(self, on_dispatch: Optional[Callable] = None,
+                  on_drain: Optional[Callable] = None):
+        """(on_dispatch, on_drain) pair for ``WindowScheduler.run``,
+        chained in front of any existing callbacks."""
+        def dispatch(plan, state):
+            self.on_dispatch(plan, state)
+            if on_dispatch is not None:
+                on_dispatch(plan, state)
+
+        def drain(plan, records, ys):
+            self.on_drain(plan, records, ys)
+            if on_drain is not None:
+                on_drain(plan, records, ys)
+
+        return dispatch, drain
+
+    def reset(self):
+        """Drop recorded rows and in-flight timestamps (farm eviction: the
+        requeued job replays its stream from window 0)."""
+        self.rows.clear()
+        self._t.clear()
+
+    # ----------------------------------------------------------- report ---
+    def report(self) -> Dict[str, Any]:
+        """Aggregate rows into roofline composer terms: measured seconds
+        per step, achieved flops/bytes rates, and the fraction of the
+        hardware peaks they reach."""
+        timed = [r for r in self.rows if r["wall_s"] is not None]
+        wall = sum(r["wall_s"] for r in timed)
+        steps = sum(r["size"] for r in timed)
+        out: Dict[str, Any] = {
+            "windows": len(self.rows),
+            "steps": sum(r["size"] for r in self.rows),
+            "wall_s": wall,
+            "s_per_step": wall / steps if steps else None,
+        }
+        costed = [r for r in timed if r["flops"] is not None]
+        if costed and wall > 0:
+            flops = sum(r["flops"] for r in costed)
+            bts = sum(r["bytes"] for r in costed)
+            cw = sum(r["wall_s"] for r in costed)
+            out.update({
+                "hlo_flops": flops,
+                "hlo_bytes": bts,
+                "achieved_flops_s": flops / cw,
+                "achieved_bytes_s": bts / cw,
+                "peak_flops_fraction": flops / cw / self.hw.peak_flops_bf16,
+                "peak_hbm_fraction": bts / cw / self.hw.hbm_bw,
+            })
+        return out

@@ -73,7 +73,19 @@ class LoopConfig:
 def train_loop(model, loop_cfg: LoopConfig,
                opt_cfg: OptConfig = OptConfig(),
                on_drain: Optional[Callable[[int, dict], None]] = None,
-               resume: bool = True) -> Dict[str, Any]:
+               resume: bool = True,
+               oracle_step: Optional[Callable] = None,
+               oracle_state: Any = None,
+               oracle_rtol: float = 1e-5) -> Dict[str, Any]:
+    """``oracle_step`` arms the verified-snapshot workflow: a
+    ``CommitStreamVerifier`` replays the same deterministic batch stream
+    through the oracle and checks the drained commit FIFO rows at every
+    window — a diverging commit stream raises at the drain, vetoing the
+    checkpoint ``DrainBarrier`` before the save can publish.
+    ``oracle_state`` defaults to the DUT's own starting state — the fresh
+    seed init, or the restored checkpoint on resume — so the oracle
+    replays from the same weights the engine continues from; pass a
+    different state to model a faulted engine."""
     cfg = model.cfg
 
     state = init_state(model, jax.random.key(loop_cfg.seed), opt_cfg,
@@ -98,13 +110,32 @@ def train_loop(model, loop_cfg: LoopConfig,
                              seed=loop_cfg.seed, start_step=start_step)
     losses: list = []
 
+    verifier = None
+    orc_pipe = None
+    if oracle_step is not None:
+        from repro.core.coemu import CommitStreamVerifier
+        if oracle_state is None:
+            # the DUT's own starting state — fresh init, or the restored
+            # checkpoint on resume, so the oracle replays from the same
+            # weights and step the engine continues from
+            oracle_state = state
+        orc_pipe = SyntheticPipeline(cfg, loop_cfg.batch, loop_cfg.seq,
+                                     seed=loop_cfg.seed,
+                                     start_step=start_step)
+        verifier = CommitStreamVerifier(
+            oracle_step, oracle_state, orc_pipe,
+            layers=cfg.num_layers + cfg.encoder_layers, rtol=oracle_rtol,
+            start_step=start_step)
+
     try:
         runner = _run_fused if loop_cfg.fused else _run_per_step
         state = runner(model, loop_cfg, opt_cfg, state, shell, sh, ingest,
                        pipe, prof, wd, cov, ckpt, losses, start_step,
-                       on_drain)
+                       on_drain, verifier)
     finally:
         pipe.close()
+        if orc_pipe is not None:
+            orc_pipe.close()
         if ckpt:
             ckpt.wait()
 
@@ -142,7 +173,8 @@ def _step_counter(prof):
 
 
 def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
-               prof, wd, cov, ckpt, losses, start_step, on_drain):
+               prof, wd, cov, ckpt, losses, start_step, on_drain,
+               verifier=None):
     """Group-granular engine: one fused dispatch per clock-gated window,
     host drain of window i overlapped with window i+1's device compute."""
     group_fn = shell.compile_group(
@@ -152,6 +184,8 @@ def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
     sched = shell.scheduler(overlap=True, timer=prof)
 
     def emit(plan, records, metrics):
+        if verifier is not None:        # raising here vetoes the barrier
+            verifier(plan.last, records)
         losses.extend(np.asarray(metrics["loss"], np.float32).tolist())
         cov.update(records["csrs"])
         if on_drain:
@@ -166,7 +200,8 @@ def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
 
 
 def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
-                  prof, wd, cov, ckpt, losses, start_step, on_drain):
+                  prof, wd, cov, ckpt, losses, start_step, on_drain,
+                  verifier=None):
     """Per-step dispatch baseline (``overlap=False``: serial in-place
     drains at window boundaries). Loss materialization is deferred to drain
     boundaries — no blocking sync inside the device phase."""
@@ -191,6 +226,8 @@ def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
         return state, sh, window_losses
 
     def emit(plan, records, window_losses):
+        if verifier is not None:        # raising here vetoes the barrier
+            verifier(plan.last, records)
         losses.extend(float(x) for x in window_losses)
         cov.update(records["csrs"])
         if on_drain:

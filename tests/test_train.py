@@ -174,3 +174,74 @@ def test_train_loop_checkpoint_resume(tmp_path):
     # the resumed run re-executes steps 4..5 on identical data
     np.testing.assert_allclose(resumed["losses"], full["losses"][4:],
                                rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- verified checkpoints ----
+def test_commit_verifier_clean_oracle_publishes_checkpoints(tmp_path):
+    """The verified-snapshot workflow: with a clean oracle replaying the
+    same deterministic stream, every window's commit rows are accepted and
+    checkpoints publish normally."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    oracle = jax.jit(make_train_step(model))
+    lc = LoopConfig(steps=8, batch=2, seq=16, sample_interval=2,
+                    checkpoint_every=4, checkpoint_dir=str(tmp_path))
+    out = train_loop(model, lc, resume=False, oracle_step=oracle)
+    assert len(out["losses"]) == 8
+    assert CheckpointManager(str(tmp_path)).steps() == [4, 8]
+
+
+def test_commit_verifier_faulted_engine_blocks_checkpoint(tmp_path):
+    """A diverging commit stream raises at the drain, which vetoes the
+    checkpoint DrainBarrier: the save never publishes."""
+    from repro.core.coemu import CommitDivergence
+
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    oracle = jax.jit(make_train_step(model))
+    # a faulted engine: its commit stream comes from different params than
+    # the oracle replays, so the very first window's rows diverge
+    bad_state = init_state(model, jax.random.key(99))
+    lc = LoopConfig(steps=8, batch=2, seq=16, sample_interval=2,
+                    checkpoint_every=4, checkpoint_dir=str(tmp_path))
+    with pytest.raises(CommitDivergence):
+        train_loop(model, lc, resume=False, oracle_step=oracle,
+                   oracle_state=bad_state)
+    assert CheckpointManager(str(tmp_path)).steps() == []   # save vetoed
+
+
+def test_commit_verifier_survives_checkpoint_resume(tmp_path):
+    """On resume the default oracle starts from the RESTORED state (not a
+    fresh step-0 init), so a healthy resumed run verifies clean and keeps
+    publishing checkpoints."""
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    oracle = jax.jit(make_train_step(model))
+    lc = LoopConfig(steps=8, batch=2, seq=16, sample_interval=2,
+                    checkpoint_every=4, checkpoint_dir=str(tmp_path))
+    # first process: verified run to step 4, then "preemption"
+    train_loop(model, LoopConfig(**{**lc.__dict__, "steps": 4}),
+               resume=False, oracle_step=oracle)
+    assert CheckpointManager(str(tmp_path)).steps() == [4]
+    # fresh process resumes from step 4 with the verifier still armed
+    out = train_loop(model, lc, resume=True, oracle_step=oracle)
+    assert len(out["losses"]) == 4                  # steps 4..7 replayed
+    assert CheckpointManager(str(tmp_path)).steps() == [4, 8]
+
+
+def test_commit_verifier_vetoes_per_step_engine_too(tmp_path):
+    """Both scheduler engines share the barrier semantics: the per-step
+    baseline's checkpoint is equally vetoed by a diverging stream."""
+    from repro.core.coemu import CommitDivergence
+
+    cfg = get_smoke_config("granite-8b")
+    model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
+    oracle = jax.jit(make_train_step(model))
+    bad_state = init_state(model, jax.random.key(99))
+    lc = LoopConfig(steps=4, batch=2, seq=16, sample_interval=2,
+                    checkpoint_every=4, checkpoint_dir=str(tmp_path),
+                    fused=False)
+    with pytest.raises(CommitDivergence):
+        train_loop(model, lc, resume=False, oracle_step=oracle,
+                   oracle_state=bad_state)
+    assert CheckpointManager(str(tmp_path)).steps() == []
