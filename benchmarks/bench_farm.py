@@ -3,14 +3,21 @@ same boards run serially (a one-slot farm — identical plumbing, no
 concurrency). The farm number is the paper's board-farm claim: every
 board's window dispatches before any board's previous window is fetched,
 so each board's host drain overlaps every board's in-flight compute.
-Also records that eviction + requeue preserves verified outputs."""
+Also records that eviction + requeue preserves verified outputs, and the
+async-vs-lockstep head-of-line number: per-slot dispatcher threads vs the
+single round-robin host thread, with and without one synthetic slow slot
+(boards modeled as jit compute + a per-window service delay — in lockstep
+the slow board's delay serializes into EVERY board's round; in async it
+costs only its own pipeline)."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit
 from repro.configs import get_smoke_config
 from repro.core.coemu import _stack_on_device, subsystem_boards
 from repro.core.schedule import iter_windows
@@ -49,8 +56,20 @@ def main():
     total_steps = len(boards) * n_steps
 
     _run(boards, slots=1)                       # compile every board
-    us_serial = timeit(lambda: _run(boards, slots=1), n=5)
-    us_farm = timeit(lambda: _run(boards, slots=len(boards)), n=5)
+    _run(boards, slots=len(boards))
+    # interleaved A/B pairs: this shared CPU drifts enough between
+    # measurement blocks to swing a back-to-back comparison either way
+    ser, farm = [], []
+    for _ in range(7):
+        t0 = time.perf_counter()
+        _run(boards, slots=1)
+        ser.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        _run(boards, slots=len(boards))
+        farm.append(time.perf_counter() - t0)
+    us_serial = sorted(ser)[len(ser) // 2] * 1e6
+    us_farm = sorted(farm)[len(farm) // 2] * 1e6
+    won = sum(1 for a, b in zip(ser, farm) if a > b)
     sps_serial = total_steps / (us_serial / 1e6)
     sps_farm = total_steps / (us_farm / 1e6)
     emit("farm_serial", us_serial / total_steps,
@@ -58,7 +77,8 @@ def main():
     emit("farm_manager", us_farm / total_steps,
          f"boards={len(boards)}|slots={len(boards)}"
          f"|steps_per_s={sps_farm:.0f}"
-         f"|farm_vs_serial={us_serial / us_farm:.2f}x")
+         f"|farm_vs_serial={us_serial / us_farm:.2f}x"
+         f"|pairs_won={won}/{len(ser)}")
 
     # eviction + requeue must preserve every board's verified outputs
     def collect(which):
@@ -80,6 +100,92 @@ def main():
          f"evictions={len(rep['telemetry']['evictions'])}"
          f"|requeues={rep['jobs']['board1']['requeues']}"
          f"|outputs_preserved={preserved}")
+
+    bench_async_vs_lockstep()
+
+
+# ------------------------------------------------- async vs lockstep -------
+@jax.jit
+def _delay_body(state, stack):
+    return state + jnp.sum(stack), stack * 2.0
+
+
+def _delay_engine(delay_s: float):
+    """A board with a fixed per-window service time: the sleep models the
+    board's response latency (releases the GIL, like a real device wait),
+    the jit body keeps a real dispatch in the loop."""
+    def engine(state, shell, stack):
+        time.sleep(delay_s)
+        s, ys = _delay_body(state, stack)
+        return s, shell, ys
+    return engine
+
+
+def _run_delay_farm(mode: str, delays, n_windows: int = 6):
+    mgr = FarmManager(slots=len(delays), mode=mode,
+                      evict_stragglers=False)   # measure head-of-line
+    sinks = {}                                  # blocking, not eviction
+    for i, d in enumerate(delays):
+        name = f"board{i}"
+        sinks[name] = []
+        mgr.submit(FarmJob(
+            name=name, engine=_delay_engine(d),
+            windows=[[np.float32(i * 100 + w)] for w in range(n_windows)],
+            state=jnp.float32(0), shell={},
+            stack_fn=lambda it: jnp.asarray(np.stack(it)),
+            on_drain=(lambda p, r, y, n=name: sinks[n].append(
+                np.asarray(y)))))
+    t0 = time.perf_counter()
+    mgr.run()
+    return time.perf_counter() - t0, sinks
+
+
+def bench_async_vs_lockstep():
+    """Head-of-line blocking A/B: 3 virtual slots, 6 windows per board.
+    Slow case: one board at 60ms/window vs two at 30ms — lockstep rounds
+    cost the SUM (120ms), async rounds cost the MAX (60ms), so the ideal
+    speedup is 2.0x. Uniform case: all boards at 30ms — async still wins
+    (rounds overlap entirely, ideal 3x) and must at minimum not regress.
+    Outputs must be bit-identical across modes in both cases (the
+    lockstep-as-oracle contract)."""
+    slow = [0.03, 0.03, 0.06]
+    uniform = [0.03, 0.03, 0.03]
+    n_windows = 6
+    steps = n_windows * len(slow)
+
+    results = {}
+    identical = True
+    for case, delays in (("slowslot", slow), ("uniform", uniform)):
+        outs = {}
+        for mode in ("lockstep", "async"):
+            _run_delay_farm(mode, delays)           # jit warmup
+            ts = []
+            for _ in range(3):
+                dt, sinks = _run_delay_farm(mode, delays)
+                ts.append(dt)
+            results[(case, mode)] = sorted(ts)[len(ts) // 2]
+            outs[mode] = sinks
+        identical = identical and all(
+            len(outs["lockstep"][n]) == len(outs["async"][n])
+            and all(np.array_equal(a, b)
+                    for a, b in zip(outs["lockstep"][n], outs["async"][n]))
+            for n in outs["lockstep"])
+
+    slow_x = results[("slowslot", "lockstep")] / results[("slowslot",
+                                                          "async")]
+    uni_x = results[("uniform", "lockstep")] / results[("uniform", "async")]
+    emit("farm_lockstep_slowslot",
+         results[("slowslot", "lockstep")] * 1e6 / steps,
+         "slots=3|delays=30/30/60ms|mode=lockstep")
+    emit("farm_async_slowslot",
+         results[("slowslot", "async")] * 1e6 / steps,
+         "slots=3|delays=30/30/60ms|mode=async")
+    emit("farm_async_vs_lockstep",
+         results[("slowslot", "async")] * 1e6 / steps,
+         f"slots=3|windows={n_windows}"
+         f"|slowslot_speedup={slow_x:.2f}x"
+         f"|uniform_speedup={uni_x:.2f}x"
+         f"|bit_identical={identical}")
 
 
 if __name__ == "__main__":

@@ -95,7 +95,9 @@ class _CompareAccumulator:
         self.steps = 0
 
     def ingest(self, step0: int, ys):
-        (cks_d, loss_d), (cks_o, loss_o) = ys
+        # ONE device fetch for the window's whole (dut, oracle) ys tuple —
+        # four separate np.asarray calls would each sync the stream
+        (cks_d, loss_d), (cks_o, loss_o) = jax.device_get(ys)
         cks_d = np.asarray(cks_d, np.float64)             # (g, L, 2)
         cks_o = np.asarray(cks_o, np.float64)
         self._compare(cks_d, cks_o, step0)
@@ -203,13 +205,22 @@ class CoEmulator:
 
     def _group_fn(self, step: Callable):
         """One fused dispatch per window: scan ``step`` over the batch
-        stack, ys = (per-step checksums, per-step loss)."""
+        stack, ys = (per-step checksums, per-step loss). The scan is
+        unrolled (capped at 8 steps per rolled iteration) — a rolled
+        XLA while-loop around a remat'd train step costs ~2x the
+        unrolled body on CPU, which is exactly what made grouped verify
+        lose to step-locked before; unrolling is semantics-preserving,
+        so per-step checksums stay bit-identical."""
         def body(state, batch):
             state, metrics, aux = step(state, batch)
             return state, (layer_checksums(aux).astype(jnp.float32),
                            metrics["loss"].astype(jnp.float32))
 
-        return jax.jit(lambda state, stack: jax.lax.scan(body, state, stack))
+        def group(state, stack):
+            g = jax.tree.leaves(stack)[0].shape[0]
+            return jax.lax.scan(body, state, stack, unroll=min(g, 8))
+
+        return jax.jit(group)
 
     def _cached_group(self, step: Callable):
         if step not in self._group_fns:

@@ -51,7 +51,7 @@ the bare 4-tuple form is unchanged):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Iterable, List, Optional, Sequence
 
 from contextlib import contextmanager
 
@@ -100,7 +100,10 @@ class Client:
     """One ``run_many`` board with per-client plumbing. Fields left at
     ``_INHERIT`` fall back to the scheduler's drain_fn/stack_fn/reset, so a
     bare ``(engine, windows, state, shell)`` tuple and
-    ``Client(engine, windows, state, shell)`` behave identically."""
+    ``Client(engine, windows, state, shell)`` behave identically.
+    ``barriers`` are per-client :class:`DrainBarrier`\\ s — each client
+    commits at its OWN window boundaries (the farm's per-job checkpoint
+    path), independent of its neighbors' progress."""
     engine: Callable
     windows: Iterable
     state: Any = None
@@ -108,6 +111,7 @@ class Client:
     drain_fn: Any = _INHERIT
     stack_fn: Any = _INHERIT
     reset: Any = _INHERIT
+    barriers: Sequence = ()
 
 
 class ClientPolicy:
@@ -308,18 +312,34 @@ class WindowScheduler:
         return dataclasses.replace(c, drain_fn=drain_fn, stack_fn=stack_fn,
                                    reset=reset)
 
+    def driver(self, client, *, key=None,
+               on_drain: Optional[Callable] = None,
+               on_dispatch: Optional[Callable] = None,
+               place_fn: Optional[Callable] = None) -> "ClientDriver":
+        """A thread-confinable per-client pipeline over this scheduler's
+        window/overlap settings (see :class:`ClientDriver`)."""
+        return ClientDriver(self, client, key=key, on_drain=on_drain,
+                            on_dispatch=on_dispatch, place_fn=place_fn)
+
     def run_many(self, clients, on_drain: Optional[Callable] = None, *,
                  on_dispatch: Optional[Callable] = None,
                  place_fn: Optional[Callable] = None,
                  policy: Optional[ClientPolicy] = None):
         """ZP-Farm pass: ``clients`` is a list of ``(engine, windows,
         state, shell)`` tuples or :class:`Client`\\ s (per-client drain /
-        stack / reset). Window *w* of EVERY client is dispatched before
-        any client's window *w-1* is drained, so each engine's drain
+        stack / reset / barriers). Window *w* of EVERY client is dispatched
+        before any client's window *w-1* is drained, so each engine's drain
         overlaps every engine's in-flight compute. Clients may have
         different window counts; a finished client's last pending window
         drains in the round it stops dispatching (after every still-alive
         client's dispatch, preserving the dispatch-before-fetch order).
+
+        The per-client machinery lives in :class:`ClientDriver`; this
+        method composes one driver per client round-robin on the CALLING
+        thread — the lockstep host loop, where one slow client's dispatch
+        delays every other client's next enqueue. The async farm composes
+        the same drivers one-per-thread instead (``repro.farm.manager``),
+        which is why the driver owns all of a client's JAX interactions.
 
         ``on_drain(client_idx, plan, records, ys)``;
         ``on_dispatch(client_idx, plan, state)`` fires right after a
@@ -329,84 +349,42 @@ class WindowScheduler:
         dynamic admission / eviction / slot-free notification. Returns the
         list of final ``(state, shell)`` per client index (admitted clients
         included, in admission order)."""
-        cs: List[Client] = [self._normalize_client(c) for c in clients]
-        its = [iter(c.windows) for c in cs]
-        states = [c.state for c in cs]
-        shells = [c.shell for c in cs]
-        steps = [0] * len(cs)
-        indexes = [0] * len(cs)
-        pendings: List[Optional[Tuple]] = [None] * len(cs)
-        alive = [True] * len(cs)
+        def make(c):
+            return self.driver(c, key=len(drivers), on_drain=on_drain,
+                               on_dispatch=on_dispatch, place_fn=place_fn)
+
+        drivers: List[ClientDriver] = []
+        for c in clients:
+            drivers.append(make(c))
         rnd = 0
         while True:
             if policy is not None:
                 for c in policy.admit(rnd):
-                    c = self._normalize_client(c)
-                    cs.append(c)
-                    its.append(iter(c.windows))
-                    states.append(c.state)
-                    shells.append(c.shell)
-                    steps.append(0)
-                    indexes.append(0)
-                    pendings.append(None)
-                    alive.append(True)
-            if not any(alive):
+                    drivers.append(make(c))
+            if all(d.exhausted for d in drivers):
                 break
-            n = len(cs)
-            dispatched = [None] * n
+            progressed = []
             finished = []
-            for k in range(n):
-                if not alive[k]:
+            for k, d in enumerate(drivers):
+                if d.exhausted:
                     continue
                 if policy is not None and policy.evict(k):
-                    alive[k] = False
-                    pendings[k] = None      # discard, never deliver
+                    d.cancel()              # discard, never deliver
                     continue
-                try:
-                    items = next(its[k])
-                except StopIteration:
-                    alive[k] = False
-                    finished.append(k)
-                    continue
-                if not items:
-                    continue
-                stack = cs[k].stack_fn(items) if cs[k].stack_fn else items
-                if place_fn is not None:
-                    stack = place_fn(k, stack)
-                plan = WindowPlan(index=indexes[k], start=steps[k],
-                                  size=len(items))
-                states[k], snap, ys = cs[k].engine(states[k], shells[k],
-                                                   stack)
-                if self.overlap:
-                    shells[k] = cs[k].reset(snap) if cs[k].reset else snap
-                if on_dispatch is not None:
-                    on_dispatch(k, plan, states[k])
-                dispatched[k] = (plan, snap, ys)
-                steps[k] += len(items)
-                indexes[k] += 1
-            for k in finished:          # after every live client dispatched
-                self._flush(pendings[k], on_drain, client=k,
-                            drain_fn=cs[k].drain_fn)
-                pendings[k] = None
-                if policy is not None:
-                    policy.done(k, states[k], shells[k])
-            for k in range(n):
-                if dispatched[k] is None:
-                    continue
-                if self.overlap:
-                    self._flush(pendings[k], on_drain, client=k,
-                                drain_fn=cs[k].drain_fn)
-                    pendings[k] = dispatched[k]
+                if d.dispatch() is None:
+                    finished.append(d)
                 else:
-                    plan, snap, ys = dispatched[k]
-                    records, shells[k] = self._drain_now(
-                        snap, drain_fn=cs[k].drain_fn)
-                    self._emit(plan, records, ys, on_drain, client=k)
+                    progressed.append(d)
+            for d in finished:          # after every live client dispatched
+                d.flush()
+                if policy is not None:
+                    policy.done(d.key, d.state, d.shell)
+            for d in progressed:
+                d.advance()
             rnd += 1
-        for k in range(len(cs)):
-            self._flush(pendings[k], on_drain, client=k,
-                        drain_fn=cs[k].drain_fn)
-        return list(zip(states, shells))
+        for d in drivers:
+            d.flush()
+        return [(d.state, d.shell) for d in drivers]
 
     # ----------------------------------------------------------- plumbing --
     def _drain_now(self, snap, drain_fn=_INHERIT):
@@ -434,3 +412,111 @@ class WindowScheduler:
             on_drain(plan, records, ys)
         else:
             on_drain(client, plan, records, ys)
+
+
+class ClientDriver:
+    """Thread-confined window pipeline for ONE client (one board's host
+    driver).
+
+    Owns every host<->device interaction for its client — window stacking,
+    device placement, engine dispatch, shell double-buffer reset, deferred
+    drains, and per-client :class:`DrainBarrier` commits — so a caller can
+    confine a client's JAX dispatches to one thread (the async farm's
+    per-slot dispatcher threads) or compose many drivers round-robin on a
+    single thread (the lockstep :meth:`WindowScheduler.run_many`). The
+    driver itself takes no locks: it must only ever be touched from the
+    thread that drives it.
+
+    Protocol per window:
+
+      ``dispatch()`` — enqueue the next window (stack -> place -> engine
+          call -> shell reset) and return its :class:`WindowPlan`, or
+          ``None`` once the window stream is exhausted.
+      ``advance()`` — retire ONE window's drain: in overlap mode the
+          PREVIOUS window's (its blocking fetch runs while the window just
+          dispatched is in flight), in serial mode the window just
+          dispatched. Runs any barriers the dispatched window crossed —
+          a barrier flushes the in-flight window first, so an ``on_drain``
+          verifier that raises vetoes the commit action.
+      ``flush()`` — retire the final pending window (stream end).
+      ``cancel()`` — drop pending + dispatched windows undelivered and
+          mark the driver exhausted (eviction: a requeued job replays
+          elsewhere, so partial results must never reach ``on_drain``).
+    """
+
+    def __init__(self, sched: "WindowScheduler", client, *, key=None,
+                 on_drain: Optional[Callable] = None,
+                 on_dispatch: Optional[Callable] = None,
+                 place_fn: Optional[Callable] = None):
+        self.sched = sched
+        self.c = sched._normalize_client(client)
+        self.key = key
+        self.on_drain = on_drain
+        self.on_dispatch = on_dispatch
+        self.place_fn = place_fn
+        self._it = iter(self.c.windows)
+        self.state = self.c.state
+        self.shell = self.c.shell
+        self.step = 0
+        self.index = 0
+        self.pending = None             # (plan, snapshot, ys) awaiting drain
+        self._dispatched = None         # window in flight this round
+        self.exhausted = False
+
+    def dispatch(self) -> Optional[WindowPlan]:
+        if self.exhausted:
+            return None
+        items = None
+        while not items:                # skip empty windows, don't stall
+            try:
+                items = next(self._it)
+            except StopIteration:
+                self.exhausted = True
+                return None
+        c = self.c
+        stack = c.stack_fn(items) if c.stack_fn else items
+        if self.place_fn is not None:
+            stack = self.place_fn(self.key, stack)
+        plan = WindowPlan(index=self.index, start=self.step,
+                          size=len(items))
+        self.state, snap, ys = c.engine(self.state, self.shell, stack)
+        if self.sched.overlap:
+            self.shell = c.reset(snap) if c.reset else snap
+        if self.on_dispatch is not None:
+            self.on_dispatch(self.key, plan, self.state)
+        self._dispatched = (plan, snap, ys)
+        self.step += len(items)
+        self.index += 1
+        return plan
+
+    def advance(self):
+        cur, self._dispatched = self._dispatched, None
+        if cur is None:
+            return
+        plan = cur[0]
+        if self.sched.overlap:
+            self.flush()                # previous window's deferred drain
+            self.pending = cur
+        else:
+            _, snap, ys = cur
+            records, self.shell = self.sched._drain_now(
+                snap, drain_fn=self.c.drain_fn)
+            self.sched._emit(plan, records, ys, self.on_drain,
+                             client=self.key)
+        for b in self.c.barriers:
+            if b.fires(plan):
+                # commit barrier: every window up to the boundary must be
+                # drained and accepted before the action (forfeits ONE
+                # window's drain/compute overlap)
+                self.flush()
+                b.action(self.state, plan.boundary)
+
+    def flush(self):
+        pending, self.pending = self.pending, None
+        self.sched._flush(pending, self.on_drain, client=self.key,
+                          drain_fn=self.c.drain_fn)
+
+    def cancel(self):
+        self.pending = None
+        self._dispatched = None
+        self.exhausted = True

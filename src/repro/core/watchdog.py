@@ -3,24 +3,34 @@
 The paper's boards carry hardware watchdog timers so a hung DUT can never
 take down the farm; the cluster analogue is worker heartbeats with a
 checkpoint-restart policy and straggler flagging for 1000+-node runs.
-Host-side pure Python; injected clock for deterministic tests.
+Host-side pure Python; injected clock for deterministic tests. All
+channels are lock-protected: in the async farm every slot's dispatcher
+thread beats/observes concurrently while the control plane reads.
 
 Two channels per worker, deliberately separate:
 
   liveness  — ``heartbeat(worker)``: "this worker made progress now".
               Dead-worker detection compares the last beat against
-              ``timeout_s``.
+              ``timeout_s``. Under the async farm this is TRUE wall-time
+              liveness: each slot thread beats at its own drain
+              boundaries, so a hung board stops beating regardless of
+              what its neighbors are doing (in the lockstep loop a hung
+              board stalled everyone's beats at once).
   duration  — inter-heartbeat gaps (the default) OR explicit
-              ``observe(worker, dt)`` samples. The farm host loop is
-              lockstep (one Python thread dispatches every board's window
-              back-to-back), so inter-drain gaps are the ROUND time —
-              identical for every board and useless for telling boards
-              apart. The farm therefore observes each board's own dispatch
-              duration explicitly and heartbeats with ``gap=False`` so the
-              liveness beat does not pollute the duration stream.
+              ``observe(worker, dt)`` samples. The LOCKSTEP host loop
+              makes inter-drain gaps the ROUND time — identical for every
+              board and useless for telling boards apart — so it observes
+              each board's own dispatch duration explicitly and beats with
+              ``gap=False``. The ASYNC farm observes each window's
+              measured WALL time (dispatch to results-in-hand, taken on
+              the slot's own thread), which is the true per-board
+              divergence signal the straggler detector keys on. Each
+              sample is tagged with the observing thread's name
+              (``threads``) so per-thread attribution survives requeues.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import defaultdict, deque
 from typing import Callable, Dict, List, Optional
@@ -33,33 +43,45 @@ class Watchdog:
         self.last_beat: Dict[str, float] = {}
         self.durations: Dict[str, deque] = defaultdict(
             lambda: deque(maxlen=64))
+        self.threads: Dict[str, str] = {}   # worker -> last observing thread
+        self._lock = threading.Lock()
 
     def heartbeat(self, worker: str = "w0", gap: bool = True):
         """Liveness beat. ``gap=True`` (default) also records the gap since
         the worker's previous beat as a duration sample; ``gap=False`` is a
         pure liveness beat for callers that feed durations via
-        :meth:`observe` instead (the farm's lockstep drain loop)."""
+        :meth:`observe` instead (both farm host loops)."""
         now = self.clock()
-        if gap and worker in self.last_beat:
-            self.durations[worker].append(now - self.last_beat[worker])
-        self.last_beat[worker] = now
+        with self._lock:
+            if gap and worker in self.last_beat:
+                self.durations[worker].append(now - self.last_beat[worker])
+            self.last_beat[worker] = now
+            self.threads[worker] = threading.current_thread().name
 
     def observe(self, worker: str, duration_s: float):
-        """Record an explicitly measured duration sample (e.g. one window's
-        dispatch time on one board) without touching liveness state."""
-        self.durations[worker].append(duration_s)
+        """Record an explicitly measured duration sample (one window's
+        dispatch cost in lockstep mode, one window's measured wall in async
+        mode) without touching liveness state. Tagged with the calling
+        thread's name — in the async farm each worker's samples must all
+        come from its own slot thread."""
+        with self._lock:
+            self.durations[worker].append(duration_s)
+            self.threads[worker] = threading.current_thread().name
 
     def forget(self, worker: str):
         """Drop a worker's history. Eviction/requeue: the slot's next
         tenant must not inherit the evicted straggler's durations (it
         would be flagged on arrival)."""
-        self.last_beat.pop(worker, None)
-        self.durations.pop(worker, None)
+        with self._lock:
+            self.last_beat.pop(worker, None)
+            self.durations.pop(worker, None)
+            self.threads.pop(worker, None)
 
     def dead_workers(self) -> List[str]:
         now = self.clock()
-        return [w for w, t in self.last_beat.items()
-                if now - t > self.timeout_s]
+        with self._lock:
+            return [w for w, t in self.last_beat.items()
+                    if now - t > self.timeout_s]
 
     def stragglers(self, factor: float = 2.0, min_fleet: int = 2,
                    min_s: float = 0.0) -> List[str]:
@@ -84,11 +106,9 @@ class Watchdog:
             dispatch costs are all timer jitter, and evicting a board that
             answers in microseconds buys nothing.
         """
-        meds = {}
-        for w, d in self.durations.items():
-            if d:
-                s = sorted(d)
-                meds[w] = s[len(s) // 2]
+        with self._lock:
+            samples = {w: sorted(d) for w, d in self.durations.items() if d}
+        meds = {w: s[len(s) // 2] for w, s in samples.items()}
         if len(meds) < max(2, min_fleet):
             return []
         fleet = sorted(meds.values())[(len(meds) - 1) // 2]

@@ -2,35 +2,56 @@
 
 The paper's end state is a *farm* of scaled-down DUTs — many independently
 prototyped subsystems co-emulated concurrently behind one host. This
-module is the orchestration layer over ``WindowScheduler.run_many``:
+module is the orchestration layer over the core ``WindowScheduler``
+machinery, in two host-loop modes:
+
+  lockstep (``mode="lockstep"``) — ONE Python thread round-robins every
+      slot through ``WindowScheduler.run_many``. Deterministic round
+      structure, but one slow board's dispatch delays every other board's
+      enqueue, and "straggler" is inferred from per-board dispatch cost
+      because inter-drain gaps are the round time. Kept as the
+      bit-identity ORACLE: the async mode must deliver byte-for-byte the
+      same per-job outputs (tests assert it).
+
+  async (``mode="async"``) — the paper's non-interference guarantee made
+      real on the host side: each :class:`DeviceSlot` is driven by its own
+      dispatcher thread (:class:`_SlotWorker`) with a bounded work queue.
+      The manager becomes an admission/eviction CONTROL PLANE: it feeds
+      job assignments into slot queues, and each slot thread runs its own
+      ``ClientDriver`` pipeline (dispatch window *i+1* while draining
+      window *i*), posting completed drains back over a results queue.
+      A slow board slows only itself; the watchdog's straggler signal
+      becomes measured per-window WALL time, and liveness heartbeats
+      become true wall-time liveness (a hung board is abandoned and its
+      job requeued, without taking down the farm).
+
+Threading invariants (the GIL-friendly contract):
+
+  * ALL JAX interactions for a job — state/shell placement, window
+    stacking, engine dispatch, shell reset, drain fetch, ``verify`` — stay
+    on its slot's thread (the ``ClientDriver`` is thread-confined);
+  * the control plane ingests outputs only at results-queue hand-off
+    points, and the user-facing ``on_drain`` sink fires exactly-once, in
+    window order, on the CONTROL thread after the job completes — so a
+    stateful collector never sees concurrent or replayed windows;
+  * eviction is signalled via a per-run flag that the slot thread checks
+    at drain boundaries (between windows, never mid-dispatch), so a
+    cancelled job's in-flight window is discarded, never delivered.
+
+Shared semantics (both modes):
 
   * a job queue of :class:`FarmJob`\\ s — an engine + a replayable window
-    stream + an expected-output verifier;
-  * device placement — one job per :class:`DeviceSlot`
-    (``placement.enumerate_slots``: one slot per device, round-robin
-    virtual slots on a single-device host), state/shell pinned with
-    ``jax.device_put`` at admission and every window payload routed to the
-    job's device through the scheduler's ``place_fn`` hook;
-  * dynamic admission at drain boundaries — a queued job enters the pass
-    the round after a slot frees (the scheduler's ``ClientPolicy.done``);
-  * per-slot watchdog — liveness heartbeats fire from ``on_drain``
-    (``gap=False``) and each window's dispatch cost feeds
-    ``Watchdog.observe`` (the lockstep host loop makes inter-drain gaps
-    identical across slots, so dispatch cost is the per-board signal —
-    see ``core/watchdog.py``);
-  * straggler eviction + requeue — ``Watchdog.stragglers`` flags a slot,
-    its job is cancelled BEFORE its next dispatch (the in-flight window is
-    discarded by the scheduler, partial outputs dropped here) and requeued
-    onto a different slot, where its window stream replays from the start —
-    so an evicted job's delivered outputs are bit-identical to an
-    uninterrupted run (tests assert this);
+    stream + an expected-output verifier + optional per-job checkpoint
+    ``DrainBarrier``\\ s (barrier actions are vetoed while the job has a
+    recorded fault, so a checkpoint never publishes past a rejected
+    window);
+  * dynamic admission when a slot frees; requeue onto a DIFFERENT slot
+    after eviction, replaying the window stream from the start, so an
+    evicted job's delivered outputs are bit-identical to an uninterrupted
+    run;
   * drain-veto fault handling — a job's ``verify`` raising at a drain
     counts a veto, faults the job, and takes the same evict + requeue
     path (a board whose outputs are wrong is as evictable as a slow one).
-
-Delivery is exactly-once: a job's ``on_drain`` sink sees its windows in
-window order only after the job COMPLETES, so a stateful collector (e.g. a
-co-emulation compare accumulator) never double-ingests a replayed window.
 
 Caveat for donating engines: requeue replays from ``FarmJob.state``; on
 backends where donation is real, pass ``state``/``shell`` as zero-arg
@@ -39,11 +60,16 @@ factories so each attempt gets fresh buffers (on CPU donation is a no-op).
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.schedule import Client, ClientPolicy, WindowScheduler
+import jax
+
+from repro.core.schedule import (Client, ClientPolicy, DrainBarrier,
+                                 WindowScheduler)
 from repro.core.watchdog import Watchdog
 from repro.farm.placement import (DeviceSlot, enumerate_slots, place,
                                   place_stack)
@@ -60,10 +86,13 @@ class FarmJob:
     a zero-arg factory returning a fresh iterable — required if the stream
     cannot be materialized) so eviction can replay it from the start.
     ``verify(plan, records, ys)`` raises to veto a window (stateless — it
-    re-runs on replay); ``on_drain(plan, records, ys)`` is the
-    exactly-once, in-order sink delivered at completion. ``drain_fn`` /
-    ``stack_fn`` / ``reset`` are the per-client scheduler plumbing
-    (``None`` = shell-less)."""
+    re-runs on replay; in async mode it runs on the job's slot thread);
+    ``on_drain(plan, records, ys)`` is the exactly-once, in-order sink
+    delivered at completion on the control thread. ``barriers`` are
+    per-job :class:`DrainBarrier`\\ s (e.g. checkpoint saves) whose
+    actions are skipped while the job has a recorded fault — the
+    commit-veto contract. ``drain_fn`` / ``stack_fn`` / ``reset`` are the
+    per-client scheduler plumbing (``None`` = shell-less)."""
     name: str
     engine: Callable
     windows: Any
@@ -74,6 +103,7 @@ class FarmJob:
     drain_fn: Optional[Callable] = None
     stack_fn: Optional[Callable] = None
     reset: Optional[Callable] = None
+    barriers: Sequence[DrainBarrier] = ()
     capture: Any = None                 # roofline.WindowCapture, optional
     max_requeues: int = 1
 
@@ -95,21 +125,146 @@ class FarmJob:
 
 
 class _Run:
-    """One admission of a job onto a slot (client index k in the pass)."""
+    """One admission of a job onto a slot (client index ``idx``). In async
+    mode the slot thread owns everything here until it posts a terminal
+    message; after ``closed`` is set by the control plane, late messages
+    and callbacks from a stale (abandoned) thread are ignored."""
 
-    def __init__(self, job: FarmJob, slot: DeviceSlot):
+    def __init__(self, job: FarmJob, slot: DeviceSlot, idx: int,
+                 t_assigned: float = 0.0):
         self.job = job
         self.slot = slot
+        self.idx = idx
+        self.t_assigned = t_assigned
         self.outputs: List = []
         self.fault: Optional[BaseException] = None
+        self.evict_flag = threading.Event()
+        self.evict_why: Optional[str] = None
+        self.closed = False
+
+
+_STOP = object()
+
+
+class _SlotWorker(threading.Thread):
+    """One device slot's dispatcher thread: pulls job assignments off a
+    bounded work queue and drives each through a thread-confined
+    ``ClientDriver`` pipeline (dispatch window *i+1* while draining window
+    *i*). Every JAX interaction for the job happens HERE; the control
+    plane only ever sees completed drains and terminal messages on the
+    results queue."""
+
+    def __init__(self, mgr: "FarmManager", slot: DeviceSlot, depth: int):
+        super().__init__(name=f"farm-{slot.name}", daemon=True)
+        self.mgr = mgr
+        self.slot = slot
+        self.inbox: queue_mod.Queue = queue_mod.Queue(maxsize=max(1, depth))
+        self._idle_since: Optional[float] = None
+
+    def run(self):
+        while True:
+            task = self.inbox.get()
+            if task is _STOP:
+                return
+            self._drive(task)
+
+    # ------------------------------------------------------------ driving --
+    def _drive(self, run: _Run):
+        mgr = self.mgr
+        job = run.job
+        now = mgr.clock()
+        mgr.telemetry.queue_wait(self.slot.name, now - run.t_assigned)
+        if self._idle_since is not None:
+            mgr.telemetry.idle(self.slot.name, now - self._idle_since)
+        mgr.wd.heartbeat(self.slot.name, gap=False)   # picked up: alive
+        t_dispatched: Dict[int, float] = {}           # window idx -> t0
+
+        def on_dispatch(k, plan, state):
+            if run.closed:
+                return
+            if job.capture is not None:
+                job.capture.on_dispatch(plan, state)
+
+        def on_drain(k, plan, records, ys):
+            if run.closed:
+                return
+            t0 = mgr.clock()
+            jax.block_until_ready(ys)     # results truly in hand, HERE —
+            # the blocking fetch stays on the slot's own thread
+            mgr.wd.heartbeat(self.slot.name, gap=False)
+            td = t_dispatched.pop(plan.index, None)
+            if td is not None and plan.index > 0:
+                # measured window WALL (dispatch -> results in hand) is the
+                # async straggler signal; window 0 pays jit compilation
+                # (the farm analog of bitstream build time), a known
+                # one-off, not slowness
+                mgr.wd.observe(self.slot.name, mgr.clock() - td)
+            if job.capture is not None:
+                job.capture.on_drain(plan, records, ys)
+            if job.verify is not None and run.fault is None:
+                try:
+                    job.verify(plan, records, ys)
+                except Exception as e:  # noqa: BLE001 — veto, not crash
+                    mgr.telemetry.veto(self.slot.name)
+                    run.fault = e
+            mgr.telemetry.drain(self.slot.name, mgr._key(run, plan),
+                                wall_s=mgr.clock() - t0)
+            mgr._results.put(("drain", run, plan, records, ys))
+
+        try:
+            client = Client(
+                engine=job.engine, windows=job._window_iter(),
+                state=place(job._initial("state"), self.slot),
+                shell=place(job._initial("shell"), self.slot),
+                drain_fn=job.drain_fn, stack_fn=job.stack_fn,
+                reset=job.reset, barriers=mgr._gated_barriers(run))
+            driver = mgr.sched.driver(
+                client, key=run.idx, on_drain=on_drain,
+                on_dispatch=on_dispatch,
+                place_fn=lambda k, stack: place_stack(stack, self.slot))
+            while True:
+                t0 = mgr.clock()
+                plan = driver.dispatch()
+                if plan is None:
+                    driver.flush()        # final window's deferred drain
+                    if run.fault is not None:
+                        mgr._results.put(("fault", run))
+                    else:
+                        mgr._results.put(
+                            ("done", run, driver.state, driver.shell))
+                    break
+                t_dispatched[plan.index] = t0
+                mgr.telemetry.dispatch(self.slot.name, mgr._key(run, plan),
+                                       mgr.clock() - t0)
+                driver.advance()          # drains window i-1 on THIS thread
+                # drain boundary: the only cancellation points — a job is
+                # never cut mid-dispatch, its in-flight window is simply
+                # discarded undelivered
+                if run.fault is not None:
+                    driver.cancel()
+                    mgr._results.put(("fault", run))
+                    break
+                if run.evict_flag.is_set():
+                    driver.cancel()
+                    mgr._results.put(("evicted", run))
+                    break
+        except BaseException as e:  # noqa: BLE001 — report, don't die
+            mgr._results.put(("crash", run, e))
+        self._idle_since = mgr.clock()
 
 
 class FarmManager(ClientPolicy):
-    """Job queue + placement + watchdog + eviction over one
-    ``WindowScheduler.run_many`` pass. ``slots`` may be a slot list, an
-    int (minimum concurrency; virtual slots fill in on single-device
-    hosts), or None (``max(min_slots, n_devices)``, capped at the number
-    of submitted jobs)."""
+    """Job queue + placement + watchdog + eviction in two host-loop modes
+    (see module docstring). ``slots`` may be a slot list, an int (minimum
+    concurrency; virtual slots fill in on single-device hosts), or None
+    (``max(min_slots, n_devices)``, capped at the number of submitted
+    jobs). ``mode`` is ``"lockstep"`` (one round-robin host thread — the
+    bit-identity oracle) or ``"async"`` (one dispatcher thread per slot).
+    ``slot_queue_depth`` bounds each slot's async work queue (1 = admit
+    only to idle slots; 2 lets the next job pre-stage behind the current
+    one, eliminating the idle gap between assignments). ``poll_s`` is the
+    control plane's results-queue poll interval — the cadence of watchdog
+    sweeps when no drains are arriving."""
 
     def __init__(self, slots: Any = None, min_slots: int = 3,
                  scheduler: Optional[WindowScheduler] = None,
@@ -118,7 +273,12 @@ class FarmManager(ClientPolicy):
                  straggler_min_s: float = 0.01,
                  evict_stragglers: bool = True,
                  telemetry: Optional[FarmTelemetry] = None,
+                 mode: str = "lockstep",
+                 slot_queue_depth: int = 1,
+                 poll_s: float = 0.02,
                  clock: Callable[[], float] = time.perf_counter):
+        if mode not in ("lockstep", "async"):
+            raise ValueError(f"unknown farm mode: {mode!r}")
         self._slots_arg = slots
         self.min_slots = min_slots
         self.sched = scheduler or WindowScheduler(
@@ -128,6 +288,9 @@ class FarmManager(ClientPolicy):
         self.straggler_min_s = straggler_min_s
         self.evict_stragglers = evict_stragglers
         self.telemetry = telemetry or FarmTelemetry(clock=clock)
+        self.mode = mode
+        self.slot_queue_depth = max(1, slot_queue_depth)
+        self.poll_s = poll_s
         self.clock = clock
 
         self.queue: deque = deque()
@@ -142,6 +305,11 @@ class FarmManager(ClientPolicy):
         self._force: set = set()                # job names, test/CLI hook
         self._pre: Dict[int, float] = {}        # client idx -> t(place_fn)
         self._next_idx = 0
+        # ----- async control plane state -----
+        self._results: queue_mod.Queue = queue_mod.Queue()
+        self._workers: Dict[str, _SlotWorker] = {}
+        self._slot_load: Dict[str, int] = {}    # assigned-not-finished runs
+        self._lost: set = set()                 # abandoned (hung) slots
 
     # ------------------------------------------------------------- intake --
     def submit(self, job: FarmJob) -> FarmJob:
@@ -150,7 +318,7 @@ class FarmManager(ClientPolicy):
         return job
 
     def force_evict(self, job_name: str):
-        """Mark a job for eviction at the next drain boundary (the
+        """Mark a job for eviction at its next drain boundary (the
         deterministic test/CLI path — the watchdog path is wall-time)."""
         self._force.add(job_name)
 
@@ -163,16 +331,18 @@ class FarmManager(ClientPolicy):
         elif self._slots_arg is not None:
             self.slots = list(self._slots_arg)
         else:
-            import jax
             self.slots = enumerate_slots(min_slots=min(
                 len(self.queue), max(self.min_slots, len(jax.devices()))))
-        self._free = list(self.slots)
-        # the initial client list MUST be empty: every client enters via
-        # admit(), so the scheduler's positional indices stay in lockstep
-        # with _next_idx and the callbacks route to the right _Run
-        self.sched.run_many([], on_drain=self._on_drain,
-                            on_dispatch=self._on_dispatch,
-                            place_fn=self._place, policy=self)
+        if self.mode == "async":
+            self._run_async()
+        else:
+            self._free = list(self.slots)
+            # the initial client list MUST be empty: every client enters via
+            # admit(), so the scheduler's positional indices stay in lockstep
+            # with _next_idx and the callbacks route to the right _Run
+            self.sched.run_many([], on_drain=self._on_drain,
+                                on_dispatch=self._on_dispatch,
+                                place_fn=self._place, policy=self)
         report = self.report()
         if strict:
             failed = [n for n, j in report["jobs"].items()
@@ -183,6 +353,7 @@ class FarmManager(ClientPolicy):
 
     def report(self) -> dict:
         return {
+            "mode": self.mode,
             "jobs": {j.name: {"status": j.status,
                               "windows": j.windows_drained,
                               "requeues": j.requeues,
@@ -190,6 +361,200 @@ class FarmManager(ClientPolicy):
                               "error": j.error} for j in self.jobs},
             "telemetry": self.telemetry.report(),
         }
+
+    # ================================================== async control plane
+    def _run_async(self):
+        self._workers = {s.name: _SlotWorker(self, s, self.slot_queue_depth)
+                         for s in self.slots}
+        self._slot_load = {s.name: 0 for s in self.slots}
+        self._lost = set()
+        for w in self._workers.values():
+            w.start()
+        try:
+            self._assign_async()
+            while self._running or self.queue:
+                try:
+                    msg = self._results.get(timeout=self.poll_s)
+                except queue_mod.Empty:
+                    msg = None
+                if msg is not None:
+                    self._handle_async(msg)
+                self._sweep_async()
+                self._assign_async()
+        finally:
+            for w in self._workers.values():
+                try:
+                    w.inbox.put_nowait(_STOP)
+                except queue_mod.Full:
+                    pass
+            for w in self._workers.values():
+                if w.slot.name not in self._lost:
+                    w.join(timeout=10.0)
+
+    def _assign_async(self):
+        """Admission: feed queued jobs into slot work queues, honoring the
+        requeue avoid-slot preference, with the same progress guarantee as
+        lockstep admit (the preference yields when nothing else can ever
+        free a different slot)."""
+        assigned = 0
+        deferred = []
+        while self.queue:
+            job = self.queue.popleft()
+            slot = self._pick_async_slot(self._avoid.get(job.name))
+            if slot is None:            # only its old slot has capacity:
+                deferred.append(job)    # wait for a DIFFERENT one
+                continue
+            self._avoid.pop(job.name, None)
+            self._dispatch_to_slot(job, slot)
+            assigned += 1
+        self.queue.extendleft(reversed(deferred))
+        if not assigned and not self._running and self.queue:
+            # nothing running, nothing assigned: no other slot will ever
+            # free, so the avoid preference must yield (progress guarantee)
+            job = self.queue.popleft()
+            self._avoid.pop(job.name, None)
+            slot = self._pick_async_slot(None)
+            if slot is None:
+                raise FarmError(
+                    "no live slots left to place queued jobs "
+                    f"(lost: {sorted(self._lost)})")
+            self._dispatch_to_slot(job, slot)
+            assigned += 1
+        if assigned:
+            self.telemetry.occupancy(len(self._running), len(self.slots))
+
+    def _pick_async_slot(self, avoid: Optional[str]) -> Optional[DeviceSlot]:
+        # least-loaded first: with slot_queue_depth >= 2 a fixed slot
+        # order would double-book early slots while later ones sit idle
+        candidates = sorted(
+            (s for s in self.slots
+             if s.name not in self._lost
+             and self._slot_load[s.name] < self.slot_queue_depth),
+            key=lambda s: (self._slot_load[s.name], s.index))
+        live = [s for s in self.slots if s.name not in self._lost]
+        for s in candidates:
+            if s.name != avoid:
+                return s
+        if len(live) == 1 and candidates:
+            return candidates[0]        # single-slot farm: no alternative
+        return None
+
+    def _dispatch_to_slot(self, job: FarmJob, slot: DeviceSlot):
+        job.attempts += 1
+        job.status = "running"
+        job.last_slot = slot.name
+        run = _Run(job, slot, self._next_idx, t_assigned=self.clock())
+        self._next_idx += 1
+        self._running[run.idx] = run
+        self._slot_load[slot.name] += 1
+        self.wd.heartbeat(slot.name, gap=False)   # assigned: alive
+        self.telemetry.depth(slot.name,
+                             self._workers[slot.name].inbox.qsize() + 1)
+        self._workers[slot.name].inbox.put(run)
+
+    def _handle_async(self, msg):
+        kind, run = msg[0], msg[1]
+        if run.closed:                  # stale message from an abandoned
+            return                      # thread: the run is already gone
+        if kind == "drain":
+            _, _, plan, records, ys = msg
+            run.outputs.append((plan, records, ys))
+            return
+        run.closed = True
+        self._running.pop(run.idx, None)
+        self._slot_load[run.slot.name] -= 1
+        if kind == "done":
+            self._finish_run(run, msg[2], msg[3])
+        elif kind == "fault":
+            self._requeue_or_fail(run, f"drain veto: {run.fault}")
+        elif kind == "evicted":
+            self._requeue_or_fail(run, run.evict_why or "evicted")
+        else:  # crash: a slot-thread exception is a board fault, not a
+            self._requeue_or_fail(run, f"slot thread crash: {msg[2]!r}")
+        self.telemetry.occupancy(len(self._running), len(self.slots))
+
+    def _sweep_async(self):
+        """Control-plane sweep: watchdog stragglers (measured window wall)
+        + forced marks are SIGNALLED to the slot thread (honored at its
+        next drain boundary); hung boards (liveness timeout) are abandoned
+        — the slot leaves the pool, the job requeues elsewhere."""
+        marks: Dict[int, str] = {}
+        if self.evict_stragglers and self._running:
+            # unlike the lockstep sweep, async jobs finish at their own
+            # pace: a straggler is often the LAST one running, judged
+            # against the departed fleet's retained samples — the
+            # watchdog's own min_fleet (>= 2 sampled workers) is the gate
+            slow = set(self.wd.stragglers(self.straggler_factor,
+                                          min_s=self.straggler_min_s))
+            for idx, run in self._running.items():
+                if run.slot.name in slow:
+                    marks.setdefault(idx, "straggler")
+        for idx, run in self._running.items():
+            if run.job.name in self._force:
+                marks.setdefault(idx, "forced")
+        for idx, why in marks.items():
+            run = self._running[idx]
+            if run.evict_flag.is_set():
+                continue                # already signalled
+            if (run.fault is None
+                    and run.job.requeues >= run.job.max_requeues):
+                continue                # budget spent: let it limp home
+            run.evict_why = why
+            run.evict_flag.set()
+        dead = set(self.wd.dead_workers())
+        for run in [r for r in self._running.values()
+                    if r.slot.name in dead]:
+            self._abandon_async(run)
+
+    def _abandon_async(self, run: _Run):
+        """A slot whose thread stopped beating past the watchdog timeout is
+        HUNG mid-dispatch (it cannot even reach an eviction check). The
+        board is written off: its thread is left to the OS (daemon), the
+        slot never returns to the pool, and the job requeues elsewhere."""
+        run.closed = True
+        run.evict_flag.set()            # if the thread ever wakes, stop it
+        self._running.pop(run.idx, None)
+        self._slot_load[run.slot.name] -= 1
+        self._lost.add(run.slot.name)
+        # orphan any pre-staged (not yet started) assignments on the queue
+        w = self._workers[run.slot.name]
+        while True:
+            try:
+                staged = w.inbox.get_nowait()
+            except queue_mod.Empty:
+                break
+            if staged is _STOP or staged.closed:
+                continue
+            staged.closed = True
+            self._running.pop(staged.idx, None)
+            self._slot_load[staged.slot.name] -= 1
+            self._requeue_or_fail(staged, "slot lost (hung board)")
+        self._requeue_or_fail(run, "hung board (liveness timeout)")
+
+    def _gated_barriers(self, run: _Run):
+        """Per-attempt barrier wrappers: a barrier action (e.g. a
+        checkpoint save) is skipped while the run has a recorded fault —
+        the drain verifier's rejection VETOES the commit, exactly the
+        ``DrainBarrier`` contract in the single-client scheduler."""
+        def gate(action):
+            def act(state, boundary):
+                if run.fault is None and not run.evict_flag.is_set():
+                    action(state, boundary)
+            return act
+
+        return tuple(DrainBarrier(every=b.every, action=gate(b.action))
+                     for b in run.job.barriers)
+
+    def _finish_run(self, run: _Run, state, shell):
+        job = run.job
+        self._force.discard(job.name)   # a stale mark must not outlive us
+        job.status = "done"
+        job.windows_drained = len(run.outputs)
+        self.results[job.name] = (state, shell)
+        self.outputs[job.name] = run.outputs
+        if job.on_drain is not None:
+            for plan, records, ys in run.outputs:   # exactly-once, in order
+                job.on_drain(plan, records, ys)
 
     # ----------------------------------------------- ClientPolicy protocol --
     def admit(self, round_idx: int):
@@ -220,19 +585,11 @@ class FarmManager(ClientPolicy):
 
     def done(self, k: int, state, shell):
         run = self._running.pop(k)
-        job = run.job
         self._free.append(run.slot)
         if run.fault is not None:
             self._requeue_or_fail(run, f"drain veto: {run.fault}")
             return
-        self._force.discard(job.name)   # a stale mark must not outlive us
-        job.status = "done"
-        job.windows_drained = len(run.outputs)
-        self.results[job.name] = (state, shell)
-        self.outputs[job.name] = run.outputs
-        if job.on_drain is not None:
-            for plan, records, ys in run.outputs:   # exactly-once, in order
-                job.on_drain(plan, records, ys)
+        self._finish_run(run, state, shell)
 
     # -------------------------------------------------- scheduler callbacks --
     def _place(self, k: int, stack):
@@ -283,13 +640,14 @@ class FarmManager(ClientPolicy):
         job.last_slot = slot.name
         k = self._next_idx
         self._next_idx += 1
-        self._running[k] = _Run(job, slot)
+        run = _Run(job, slot, k)
+        self._running[k] = run
         self.wd.heartbeat(slot.name, gap=False)
         return Client(engine=job.engine, windows=job._window_iter(),
                       state=place(job._initial("state"), slot),
                       shell=place(job._initial("shell"), slot),
                       drain_fn=job.drain_fn, stack_fn=job.stack_fn,
-                      reset=job.reset)
+                      reset=job.reset, barriers=self._gated_barriers(run))
 
     def _process_evictions(self):
         """Drain-boundary eviction sweep: watchdog stragglers + forced

@@ -1,15 +1,33 @@
-"""Farm telemetry: per-device window latency, occupancy, drain vetoes.
+"""Farm telemetry: per-device window latency, occupancy, drain vetoes,
+and per-slot host-overhead attribution.
 
 Aggregates every board's signals into ONE farm report (the FireSim
 manager's consolidated run-farm status): per-slot window latency
 (dispatch-to-drain, pipelined — the drain of window *i* lands while window
 *i+1* is in flight, so this is "time until the window's results were in
-hand"), per-slot dispatch cost (the engine-call wall time the straggler
-detector keys on), occupancy sampled at every drain boundary, drain-veto
-counts (a job verifier rejecting a window), and the eviction log.
+hand"), per-slot dispatch cost (the engine-call wall time), occupancy
+sampled at every admission/drain boundary, drain-veto counts (a job
+verifier rejecting a window), and the eviction log.
+
+Host-overhead channels (filled by the ASYNC farm's slot threads, from
+their own timestamps — the attribution that makes an async win explainable
+rather than just measured):
+
+  queue_wait — admission-to-pickup: how long an assigned job sat in the
+      slot's bounded work queue before its dispatcher thread took it;
+  dispatch   — the engine-call wall (the enqueue, per window);
+  drain      — the blocking fetch + verify wall per retired window;
+  idle       — the gap between a slot thread finishing one assignment and
+      picking up the next (slot starvation — admission latency, not board
+      slowness);
+  queue_depth — slot work-queue depth sampled at every assignment.
+
+All mutation is lock-protected: slot threads record concurrently while
+the control plane reads reports.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import defaultdict
 from typing import Callable, Dict, List, Tuple
@@ -30,54 +48,92 @@ class FarmTelemetry:
         self.clock = clock
         self.window_ms = defaultdict(list)      # slot -> drain latencies
         self.dispatch_ms = defaultdict(list)    # slot -> engine-call cost
+        self.drain_wall_ms = defaultdict(list)  # slot -> fetch+verify wall
+        self.queue_wait_ms = defaultdict(list)  # slot -> admission->pickup
+        self.idle_ms = defaultdict(list)        # slot -> between-job gaps
+        self.queue_depth = defaultdict(list)    # slot -> depth at assignment
         self.windows = defaultdict(int)         # slot -> drained windows
         self.vetoes = defaultdict(int)          # slot -> drain vetoes
         self.evictions: List[Tuple[str, str, str]] = []  # (slot, job, why)
         self.occupancy_samples: List[Tuple[int, int]] = []
         self._t: Dict[Tuple[str, object], float] = {}
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------ events --
     def dispatch(self, slot: str, key, cost_s: float):
         """One window enqueued on ``slot``: start its drain-latency clock
         and record the dispatch (engine-call) cost."""
-        self._t[(slot, key)] = self.clock()
-        self.dispatch_ms[slot].append(cost_s * 1e3)
+        now = self.clock()
+        with self._lock:
+            self._t[(slot, key)] = now
+            self.dispatch_ms[slot].append(cost_s * 1e3)
 
-    def drain(self, slot: str, key):
-        t0 = self._t.pop((slot, key), None)
-        if t0 is not None:
-            self.window_ms[slot].append((self.clock() - t0) * 1e3)
-        self.windows[slot] += 1
+    def drain(self, slot: str, key, wall_s: float = None):
+        """One window's results in hand on ``slot``; ``wall_s`` optionally
+        records the host-side fetch+verify wall of the retired window."""
+        now = self.clock()
+        with self._lock:
+            t0 = self._t.pop((slot, key), None)
+            if t0 is not None:
+                self.window_ms[slot].append((now - t0) * 1e3)
+            if wall_s is not None:
+                self.drain_wall_ms[slot].append(wall_s * 1e3)
+            self.windows[slot] += 1
+
+    def queue_wait(self, slot: str, wait_s: float):
+        with self._lock:
+            self.queue_wait_ms[slot].append(wait_s * 1e3)
+
+    def idle(self, slot: str, gap_s: float):
+        with self._lock:
+            self.idle_ms[slot].append(gap_s * 1e3)
+
+    def depth(self, slot: str, depth: int):
+        with self._lock:
+            self.queue_depth[slot].append(depth)
 
     def veto(self, slot: str):
-        self.vetoes[slot] += 1
+        with self._lock:
+            self.vetoes[slot] += 1
 
     def eviction(self, slot: str, job: str, why: str):
-        self.evictions.append((slot, job, why))
+        with self._lock:
+            self.evictions.append((slot, job, why))
 
     def occupancy(self, active: int, total: int):
-        self.occupancy_samples.append((active, total))
+        with self._lock:
+            self.occupancy_samples.append((active, total))
 
     # ------------------------------------------------------------ report --
     def report(self) -> dict:
-        devices = {}
-        for slot in sorted(set(self.windows) | set(self.dispatch_ms)):
-            devices[slot] = {
-                "windows": self.windows.get(slot, 0),
-                "window_ms": _stats(self.window_ms.get(slot, [])),
-                "dispatch_ms": _stats(self.dispatch_ms.get(slot, [])),
-                "drain_vetoes": self.vetoes.get(slot, 0),
-            }
-        occ = self.occupancy_samples
+        with self._lock:
+            slots = sorted(set(self.windows) | set(self.dispatch_ms))
+            devices = {}
+            for slot in slots:
+                devices[slot] = {
+                    "windows": self.windows.get(slot, 0),
+                    "window_ms": _stats(self.window_ms.get(slot, [])),
+                    "dispatch_ms": _stats(self.dispatch_ms.get(slot, [])),
+                    "drain_ms": _stats(self.drain_wall_ms.get(slot, [])),
+                    "queue_wait_ms": _stats(
+                        self.queue_wait_ms.get(slot, [])),
+                    "idle_ms": _stats(self.idle_ms.get(slot, [])),
+                    "queue_depth_max": max(
+                        self.queue_depth.get(slot, []), default=0),
+                    "drain_vetoes": self.vetoes.get(slot, 0),
+                }
+            occ = list(self.occupancy_samples)
+            evs = list(self.evictions)
+            vetoes = sum(self.vetoes.values())
         return {
             "devices": devices,
             "occupancy_mean": (sum(a / t for a, t in occ if t) / len(occ)
                                if occ else 0.0),
             "occupancy_peak": max((a for a, _ in occ), default=0),
             "slots": max((t for _, t in occ), default=0),
-            "drain_vetoes": sum(self.vetoes.values()),
+            "drain_vetoes": vetoes,
             "evictions": [{"slot": s, "job": j, "why": w}
-                          for s, j, w in self.evictions],
+                          for s, j, w in evs],
         }
 
     def summary(self) -> str:
@@ -89,8 +145,18 @@ class FarmTelemetry:
                  f"{len(r['evictions'])} evictions"]
         for slot, d in r["devices"].items():
             w = d["window_ms"]
-            lines.append(
-                f"  {slot}: {d['windows']} windows"
-                + (f", drain p50 {w['p50']:.1f}ms max {w['max']:.1f}ms"
-                   if w["n"] else ""))
+            line = f"  {slot}: {d['windows']} windows"
+            if w["n"]:
+                line += f", drain p50 {w['p50']:.1f}ms max {w['max']:.1f}ms"
+            host = []
+            for label, ch in (("queue", "queue_wait_ms"),
+                              ("dispatch", "dispatch_ms"),
+                              ("drain", "drain_ms"),
+                              ("idle", "idle_ms")):
+                st = d[ch]
+                if st["n"]:
+                    host.append(f"{label} {st['p50']:.1f}ms")
+            if host:
+                line += " | host: " + " ".join(host)
+            lines.append(line)
         return "\n".join(lines)

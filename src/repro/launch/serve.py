@@ -30,6 +30,7 @@ from repro.core.pshell import (FifoSpec, ShellConfig, csr_accum, drain,
 from repro.data.pipeline import make_batch_fn
 from repro.models import build_model
 from repro.models.runtime import Runtime
+from repro.roofline.capture import WindowCapture
 from repro.serve import make_prefill_step
 
 
@@ -110,9 +111,12 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
                          * 1e3)
         fifo_rows += records["fifos"]["decode"]["count"]
 
+    # measured-window roofline capture rides the decode loop by default
+    capture = WindowCapture()
+    od, odr = capture.callbacks(on_dispatch=on_dispatch, on_drain=on_drain)
     (cache, tok), _, sh = sched.run(
         engine, sched.windows(range(gen - 1)), (cache, tok), sh,
-        on_dispatch=on_dispatch, on_drain=on_drain)
+        on_dispatch=od, on_drain=odr)
     t2 = time.perf_counter()
     toks = np.concatenate(out_tokens, axis=1)
     return {
@@ -123,6 +127,7 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
         "decode_fifo_rows": fifo_rows,
         "generated": toks[:, :8].tolist(),
         "hung": wd.should_restart(),
+        "roofline": capture.report(),
     }
 
 
@@ -134,11 +139,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sample-interval", type=int, default=4)
+    ap.add_argument("--save-measured", action="store_true",
+                    help="persist the run's measured-window roofline "
+                         "record for repro.roofline.report")
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    print(json.dumps(serve(cfg, args.batch, args.prompt_len, args.gen,
-                           sample_interval=args.sample_interval),
-                     indent=1, default=float))
+    out = serve(cfg, args.batch, args.prompt_len, args.gen,
+                sample_interval=args.sample_interval)
+    if args.save_measured:
+        from repro.roofline import save_measured
+        save_measured(out["roofline"], cfg.name, "serve")
+    print(json.dumps(out, indent=1, default=float))
 
 
 if __name__ == "__main__":

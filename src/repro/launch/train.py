@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--save-measured", action="store_true",
+                    help="persist the run's measured-window roofline "
+                         "record for repro.roofline.report")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -43,10 +46,14 @@ def main():
                    grad_compress=args.grad_compress,
                    accum_steps=args.accum_steps),
         OptConfig(lr=args.lr, warmup_steps=10))
+    if args.save_measured:
+        from repro.roofline import save_measured
+        save_measured(out["roofline"], cfg.name, "train")
     print(json.dumps({
         "arch": cfg.name,
         "loss_first": out["losses"][0], "loss_last": out["losses"][-1],
         "coverage": out["coverage"], "profile_s": out["profile"],
+        "roofline": out["roofline"],
     }, indent=1, default=float))
 
 

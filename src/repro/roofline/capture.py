@@ -17,10 +17,25 @@ LOWER bound on device throughput.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.roofline.hw import Hardware, HW_V5E
+
+
+def save_measured(report: Dict[str, Any], arch: str, source: str,
+                  out_dir: str = "experiments/measured") -> str:
+    """Persist a :meth:`WindowCapture.report` as a measured-windows record
+    for ``roofline.report`` — the measured counterpart of the dry-run
+    records, rendered next to the static composition tables."""
+    d = pathlib.Path(out_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    path = d / f"{arch}_{source}.json"
+    path.write_text(json.dumps({"arch": arch, "source": source, **report},
+                               indent=1, default=float))
+    return str(path)
 
 
 def engine_cost(jitted_engine, *sample_args) -> Dict[str, float]:

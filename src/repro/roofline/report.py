@@ -145,6 +145,41 @@ def timing_section(rooflines) -> str:
     return "\n".join(lines)
 
 
+def measured_section(measured) -> str:
+    """Measured clock-gated windows (``roofline.WindowCapture`` records
+    saved by ``capture.save_measured``) next to the static composition:
+    per (arch x source) wall seconds/step and — when the capture carried
+    an HLO cost attachment — achieved rates against the hardware peaks."""
+    lines = [
+        "### §Measured windows — WindowCapture records (train / serve / "
+        "farm runs)",
+        "",
+        "`s/step` is pipelined wall (drain of window *i* lands while "
+        "window *i+1* is in flight), so achieved rates are a LOWER bound "
+        "on device throughput. Rows without cost columns ran without an "
+        "`attach_cost` compile (the default: wall-only capture).",
+        "",
+        "| arch | source | windows | steps | s/step | achieved TF/s | "
+        "peak flops | peak HBM |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, source) in sorted(measured):
+        r = measured[(arch, source)]
+        sps = r.get("s_per_step")
+        af = r.get("achieved_flops_s")
+        row = (f"| {arch} | {source} | {r.get('windows', 0)} "
+               f"| {r.get('steps', 0)} "
+               f"| {f'{sps:.4f}' if sps is not None else 'n/a'} ")
+        if af is not None:
+            row += (f"| {af/1e12:.3f} "
+                    f"| {r['peak_flops_fraction']*100:.2f}% "
+                    f"| {r['peak_hbm_fraction']*100:.2f}% |")
+        else:
+            row += "| | | |"
+        lines.append(row)
+    return "\n".join(lines)
+
+
 def pick_hillclimb_cells(rooflines):
     """worst roofline fraction / most collective-bound / most representative
     (per the assignment)."""
@@ -157,12 +192,23 @@ def pick_hillclimb_cells(rooflines):
     return worst, coll
 
 
+def _load_measured(pattern="experiments/measured/*.json"):
+    out = {}
+    for f in glob.glob(pattern):
+        r = json.load(open(f))
+        out[(r["arch"], r["source"])] = r
+    return out
+
+
 def main():
     dryruns = _load("experiments/dryrun/*.json")
     rooflines = _load("experiments/roofline/*.json")
+    measured = _load_measured()
     out = ["<!-- generated by repro.roofline.report -->", "",
            dryrun_section(dryruns), "", roofline_section(rooflines),
            "", timing_section(rooflines)]
+    if measured:
+        out += ["", measured_section(measured)]
     path = pathlib.Path("experiments/tables.md")
     path.write_text("\n".join(out))
     print(f"wrote {path}")

@@ -51,6 +51,7 @@ from repro.core import (PShell, default_shell_config, make_ingest,
                         plan_windows)
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticPipeline
+from repro.roofline.capture import WindowCapture
 from repro.train.optim import OptConfig
 from repro.train.step import make_train_step, make_group_step, init_state
 
@@ -106,6 +107,10 @@ def train_loop(model, loop_cfg: LoopConfig,
     prof = Profiler(sample_interval=loop_cfg.sample_interval)
     wd = Watchdog(timeout_s=loop_cfg.watchdog_timeout_s)
     cov = CoverageMap()
+    # measured-window roofline capture rides every run by default (wall
+    # times only — attaching HLO cost would force a second compile; see
+    # WindowCapture.attach_cost for callers that want it)
+    capture = WindowCapture()
     pipe = SyntheticPipeline(cfg, loop_cfg.batch, loop_cfg.seq,
                              seed=loop_cfg.seed, start_step=start_step)
     losses: list = []
@@ -131,7 +136,7 @@ def train_loop(model, loop_cfg: LoopConfig,
         runner = _run_fused if loop_cfg.fused else _run_per_step
         state = runner(model, loop_cfg, opt_cfg, state, shell, sh, ingest,
                        pipe, prof, wd, cov, ckpt, losses, start_step,
-                       on_drain, verifier)
+                       on_drain, verifier, capture)
     finally:
         pipe.close()
         if orc_pipe is not None:
@@ -146,6 +151,7 @@ def train_loop(model, loop_cfg: LoopConfig,
         "profile": prof.live_stack().seconds,
         "stragglers": wd.stragglers(),
         "final_step": loop_cfg.steps,
+        "roofline": capture.report(),
     }
 
 
@@ -174,7 +180,7 @@ def _step_counter(prof):
 
 def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
                prof, wd, cov, ckpt, losses, start_step, on_drain,
-               verifier=None):
+               verifier=None, capture=None):
     """Group-granular engine: one fused dispatch per clock-gated window,
     host drain of window i overlapped with window i+1's device compute."""
     group_fn = shell.compile_group(
@@ -191,17 +197,26 @@ def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
         if on_drain:
             on_drain(plan.last, records)
 
+    od, odr = _chain_capture(capture, lambda plan, state: wd.heartbeat(),
+                             emit)
     state, _, _ = sched.run(
         group_fn, _pipe_windows(pipe, loop_cfg, start_step), state, sh,
-        start_step=start_step, on_drain=emit,
-        on_dispatch=lambda plan, state: wd.heartbeat(),
+        start_step=start_step, on_drain=odr, on_dispatch=od,
         on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg))
     return state
 
 
+def _chain_capture(capture, on_dispatch, on_drain):
+    """Chain the default WindowCapture in front of the loop's own
+    callbacks (no-op pass-through when capture is None)."""
+    if capture is None:
+        return on_dispatch, on_drain
+    return capture.callbacks(on_dispatch=on_dispatch, on_drain=on_drain)
+
+
 def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
                   prof, wd, cov, ckpt, losses, start_step, on_drain,
-                  verifier=None):
+                  verifier=None, capture=None):
     """Per-step dispatch baseline (``overlap=False``: serial in-place
     drains at window boundaries). Loss materialization is deferred to drain
     boundaries — no blocking sync inside the device phase."""
@@ -233,8 +248,9 @@ def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
         if on_drain:
             on_drain(plan.last, records)
 
+    od, odr = _chain_capture(capture, None, emit)
     state, _, _ = sched.run(
         engine, _pipe_windows(pipe, loop_cfg, start_step), state, sh,
-        start_step=start_step, on_drain=emit,
+        start_step=start_step, on_drain=odr, on_dispatch=od,
         on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg))
     return state

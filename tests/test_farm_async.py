@@ -1,0 +1,262 @@
+"""Async ZP-Farm tests: per-slot dispatcher threads vs the lockstep
+oracle — bit-identical outputs (plain runs, forced eviction + requeue,
+checkpoint DrainBarrier veto mid-stream), wall-time straggler eviction,
+thread confinement of each job's dispatches, hung-board abandonment, and
+the per-slot host-overhead telemetry."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DrainBarrier, iter_windows
+from repro.core.watchdog import Watchdog
+from repro.farm import FarmJob, FarmManager
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ----------------------------------------------------------- toy workload --
+@jax.jit
+def _body(state, stack):
+    return state + jnp.sum(stack), stack * 2.0
+
+
+def _engine(state, shell, stack):
+    s, ys = _body(state, stack)
+    return s, shell, ys
+
+
+def _windows(seed, n_items=6, group=2):
+    items = [np.float32(seed * 100 + i) for i in range(n_items)]
+    return list(iter_windows(items, group))
+
+
+def _stack(items):
+    return jnp.asarray(np.stack(items))
+
+
+def _submit(mgr, n_jobs=3, engines=None, n_items=6, seed_base=0, **extra):
+    col = {}
+    for s in range(n_jobs):
+        name = f"job{s}"
+        col[name] = []
+        mgr.submit(FarmJob(
+            name=name, engine=(engines or {}).get(s, _engine),
+            windows=_windows(seed_base + s, n_items=n_items),
+            state=jnp.float32(0), shell={}, stack_fn=_stack,
+            on_drain=(lambda p, r, y, n=name: col[n].append(np.asarray(y))),
+            **extra))
+    return col
+
+
+def _run_mode(mode, n_jobs=3, n_items=6, seed_base=0, **mgr_kw):
+    mgr = FarmManager(slots=3, mode=mode, **mgr_kw)
+    col = _submit(mgr, n_jobs=n_jobs, n_items=n_items, seed_base=seed_base)
+    rep = mgr.run()
+    states = {n: np.asarray(mgr.results[n][0]) for n in col}
+    return col, states, rep
+
+
+# ----------------------------------------------------------- determinism --
+@pytest.mark.parametrize("seed_base", [0, 7])
+def test_async_bit_identical_to_lockstep(seed_base):
+    """The headline contract: the threaded farm delivers byte-for-byte the
+    outputs and final states of the lockstep oracle, for every job."""
+    lock_col, lock_states, _ = _run_mode("lockstep", seed_base=seed_base)
+    async_col, async_states, rep = _run_mode("async", seed_base=seed_base)
+    assert rep["mode"] == "async"
+    assert all(j["status"] == "done" for j in rep["jobs"].values())
+    for name in lock_col:
+        assert len(async_col[name]) == len(lock_col[name]) == 3
+        for a, b in zip(lock_col[name], async_col[name]):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(lock_states[name],
+                                      async_states[name])
+
+
+def test_async_forced_eviction_requeues_and_preserves_outputs():
+    """Eviction under threads keeps the lockstep contract: partial outputs
+    discarded, replay on a DIFFERENT slot, delivered outputs bit-identical
+    to the no-eviction lockstep baseline, exactly once."""
+    base, _, _ = _run_mode("lockstep")
+    mgr = FarmManager(slots=3, mode="async")
+    col = _submit(mgr)
+    mgr.force_evict("job1")
+    rep = mgr.run()
+    ev = rep["telemetry"]["evictions"]
+    assert len(ev) == 1 and ev[0]["job"] == "job1"
+    assert ev[0]["why"] == "forced"
+    assert rep["jobs"]["job1"]["requeues"] == 1
+    assert rep["jobs"]["job1"]["slot"] != ev[0]["slot"]  # another seat
+    for name in base:
+        got = col[name]
+        assert len(got) == 3                    # exactly-once delivery
+        for a, b in zip(base[name], got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_async_barrier_veto_midstream_then_requeue_commits_once():
+    """A per-job checkpoint DrainBarrier is VETOED when the drain verifier
+    rejects the window behind it; the evicted job replays on another slot
+    and the replay's commits (and outputs) match the lockstep oracle."""
+    def run_mode(mode):
+        commits = []
+        failed = {"n": 0}
+
+        def verify(plan, records, ys):
+            # reject the window starting at step 2 — first attempt only
+            if plan.start == 2 and failed["n"] == 0:
+                failed["n"] += 1
+                raise AssertionError("synthetic commit divergence")
+
+        got = []
+        mgr = FarmManager(slots=3, mode=mode)
+        mgr.submit(FarmJob(
+            name="ckpt", engine=_engine, windows=_windows(0),
+            state=jnp.float32(0), shell={}, stack_fn=_stack,
+            verify=verify,
+            on_drain=lambda p, r, y: got.append(np.asarray(y)),
+            barriers=(DrainBarrier(
+                every=4,
+                action=lambda state, step: commits.append(
+                    (step, float(state)))),)))
+        rep = mgr.run()
+        return commits, got, rep
+
+    lock_commits, lock_got, lock_rep = run_mode("lockstep")
+    async_commits, async_got, async_rep = run_mode("async")
+    for rep in (lock_rep, async_rep):
+        assert rep["jobs"]["ckpt"]["status"] == "done"
+        assert rep["jobs"]["ckpt"]["requeues"] == 1
+        assert rep["telemetry"]["drain_vetoes"] == 1
+        assert "veto" in rep["telemetry"]["evictions"][0]["why"]
+    # attempt 1 faulted at the window behind boundary 4: its commit was
+    # vetoed, so the ONLY commit is the clean replay's — in both modes,
+    # with the same committed state
+    assert async_commits == lock_commits
+    assert len(async_commits) == 1 and async_commits[0][0] == 4
+    assert len(async_got) == len(lock_got) == 3
+    for a, b in zip(lock_got, async_got):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------- wall-time signals --
+def test_async_watchdog_evicts_wall_time_straggler():
+    """A genuinely slow board is flagged from its MEASURED window wall
+    (observed on its own slot thread) and evicted mid-stream; outputs are
+    preserved via requeue + replay."""
+    def slow(state, shell, stack):
+        time.sleep(0.05)
+        return _engine(state, shell, stack)
+
+    base, _, _ = _run_mode("lockstep", n_items=10)
+    mgr = FarmManager(slots=3, mode="async", straggler_factor=2.0)
+    col = _submit(mgr, engines={1: slow}, n_items=10)
+    rep = mgr.run()
+    ev = rep["telemetry"]["evictions"]
+    assert [e["job"] for e in ev] == ["job1"]
+    assert ev[0]["why"] == "straggler"
+    assert rep["jobs"]["job1"]["status"] == "done"
+    for name in base:
+        assert len(col[name]) == len(base[name]) == 5
+        for a, b in zip(base[name], col[name]):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_async_thread_confinement_and_per_thread_tagging():
+    """Every dispatch of one job attempt runs on exactly one slot thread
+    (never the control thread), concurrent jobs really do run on distinct
+    threads, and the watchdog's duration samples are tagged with the slot
+    thread that observed them."""
+    seen = {}
+    lock = threading.Lock()
+
+    def make_engine(name):
+        def engine(state, shell, stack):
+            with lock:
+                seen.setdefault(name, set()).add(
+                    threading.current_thread().name)
+            return _engine(state, shell, stack)
+        return engine
+
+    mgr = FarmManager(slots=3, mode="async")
+    _submit(mgr, engines={s: make_engine(f"job{s}") for s in range(3)})
+    rep = mgr.run()
+    main = threading.current_thread().name
+    assert all(len(t) == 1 for t in seen.values())      # one thread per job
+    assert all(main not in t for t in seen.values())    # never the control
+    assert len(set().union(*seen.values())) == 3        # truly concurrent
+    for name, j in rep["jobs"].items():
+        tagged = mgr.wd.threads.get(j["slot"])
+        assert tagged is not None and tagged.startswith("farm-")
+
+
+def test_async_hung_board_abandoned_and_job_requeued():
+    """True wall-time liveness: a board hung mid-dispatch stops beating,
+    is written off past the watchdog timeout (its slot leaves the pool —
+    a Python thread cannot be killed), and its job requeues elsewhere."""
+    release = threading.Event()
+    hung = {"n": 0}
+
+    def hang_once(state, shell, stack):
+        if hung["n"] == 0:
+            hung["n"] += 1
+            release.wait(timeout=30.0)
+        return _engine(state, shell, stack)
+
+    base, _, _ = _run_mode("lockstep", n_jobs=2)
+    mgr = FarmManager(slots=2, mode="async",
+                      watchdog=Watchdog(timeout_s=0.3),
+                      evict_stragglers=False)
+    col = _submit(mgr, n_jobs=2, engines={1: hang_once})
+    try:
+        rep = mgr.run()
+    finally:
+        release.set()               # let the abandoned thread unwind
+    assert rep["jobs"]["job1"]["status"] == "done"
+    assert rep["jobs"]["job1"]["requeues"] == 1
+    ev = rep["telemetry"]["evictions"]
+    assert any("hung" in e["why"] for e in ev)
+    lost_slot = next(e["slot"] for e in ev if "hung" in e["why"])
+    assert rep["jobs"]["job1"]["slot"] != lost_slot
+    for name in base:
+        for a, b in zip(base[name], col[name]):
+            np.testing.assert_array_equal(a, b)
+    for w in mgr._workers.values():     # no thread leaks into other tests
+        w.join(timeout=5.0)
+
+
+def test_async_queue_depth_two_spreads_before_stacking():
+    """With slot_queue_depth=2, admission is least-loaded-first: three
+    equal jobs land on three DIFFERENT slots (full parallelism), not two
+    pre-staged behind one board."""
+    mgr = FarmManager(slots=3, mode="async", slot_queue_depth=2)
+    _submit(mgr)
+    rep = mgr.run()
+    assert all(j["status"] == "done" for j in rep["jobs"].values())
+    assert len({j["slot"] for j in rep["jobs"].values()}) == 3
+    assert rep["telemetry"]["occupancy_peak"] == 3
+
+
+# ----------------------------------------------------------- telemetry ----
+def test_async_telemetry_reports_host_overhead_channels():
+    """The async report attributes per-slot host overhead: queue wait,
+    dispatch wall, drain wall, and idle gaps all carry samples, and the
+    printable summary includes the host line."""
+    mgr = FarmManager(slots=2, mode="async")
+    _submit(mgr, n_jobs=4)              # 4 jobs on 2 slots: queuing + idle
+    rep = mgr.run()
+    t = rep["telemetry"]
+    assert t["occupancy_peak"] == 2 and t["slots"] == 2
+    for slot, d in t["devices"].items():
+        assert d["windows"] > 0
+        assert d["queue_wait_ms"]["n"] > 0
+        assert d["dispatch_ms"]["n"] > 0
+        assert d["drain_ms"]["n"] > 0
+        assert d["queue_depth_max"] >= 1
+    # 4 jobs over 2 slots: at least one slot went idle between assignments
+    assert any(d["idle_ms"]["n"] > 0 for d in t["devices"].values())
+    assert "host:" in mgr.telemetry.summary()

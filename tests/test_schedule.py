@@ -181,3 +181,6 @@ def test_serve_decodes_through_scheduler():
     assert len(out["decode_window_ms"]) == 3
     assert out["decode_fifo_rows"] == 7   # lossless telemetry at any interval
     assert not out["hung"]
+    # the default measured-window roofline capture rode the decode loop
+    assert out["roofline"]["windows"] == 3 and out["roofline"]["steps"] == 7
+    assert out["roofline"]["s_per_step"] > 0

@@ -169,6 +169,10 @@ def test_train_loop_checkpoint_resume(tmp_path):
     lc = dict(batch=2, seq=16, checkpoint_every=4, sample_interval=2,
               checkpoint_dir=str(tmp_path))
     full = train_loop(model(), LoopConfig(steps=6, **lc), resume=False)
+    # the default measured-window roofline capture rode the run
+    assert full["roofline"]["windows"] == 3
+    assert full["roofline"]["steps"] == 6
+    assert full["roofline"]["s_per_step"] > 0
     # simulate preemption: a fresh process resumes from step 4's checkpoint
     resumed = train_loop(model(), LoopConfig(steps=6, **lc), resume=True)
     # the resumed run re-executes steps 4..5 on identical data
