@@ -1,9 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV and writes the same rows to
-``BENCH_results.json`` (machine-readable, for cross-PR perf tracking). Run:
+``BENCH_results.json`` (machine-readable, for cross-PR perf tracking).
+Results MERGE into the existing file by default — an unfiltered run no
+longer clobbers entries it did not re-measure (e.g. a bench module that
+failed this run, or rows written by another harness); pass ``--fresh`` to
+rewrite the file from only this run's rows. Run:
 
-  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run            # all benches (merge)
   PYTHONPATH=src python -m benchmarks.run sampling   # substring filter
+  PYTHONPATH=src python -m benchmarks.run --fresh    # clobber stale rows
 """
 from __future__ import annotations
 
@@ -25,7 +30,9 @@ MODULES = [
 
 
 def main() -> None:
-    filters = sys.argv[1:]
+    argv = sys.argv[1:]
+    fresh = "--fresh" in argv
+    filters = [a for a in argv if not a.startswith("-")]
     mods = [m for m in MODULES
             if not filters or any(f in m for f in filters)]
     print("name,us_per_call,derived")
@@ -37,7 +44,7 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(mod_name)
-    write_results(merge=bool(filters))
+    write_results(merge=not fresh)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

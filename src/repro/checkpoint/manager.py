@@ -70,6 +70,55 @@ def _leaf_paths(tree) -> List[str]:
     return paths
 
 
+def step_to_window(step: int, interval: int) -> int:
+    """Step→window mapping for resume cursors: the number of
+    ``interval``-sized windows fully contained in ``step`` committed steps
+    (the tail window of a non-divisible stream counts once it completed —
+    ceil division, matching ``plan_windows`` boundaries). The farm carries
+    the window cursor explicitly inside each snapshot; this is the
+    documented contract for callers that hold only a bare checkpoint step
+    id (``store.steps()``) and a fixed interval — e.g. a manager adopting
+    another host's published snapshots."""
+    interval = max(1, interval)
+    return -(-step // interval)
+
+
+class MemorySnapshotStore:
+    """In-process snapshot target with the :class:`CheckpointManager`
+    save/restore contract (atomic publish, retention, latest-step restore)
+    but no file I/O: leaves are host-copied at ``save`` and the snapshot
+    becomes visible in one reference swap — a reader can never observe a
+    half-written snapshot. This is the farm's default requeue-resume
+    target: the snapshot only needs to outlive the job *attempt*, not the
+    process (pass a real ``CheckpointManager`` for durability — the same
+    code path, since both honor save/steps/restore/wait)."""
+
+    def __init__(self, keep: int = 2):
+        self.keep = keep
+        self._snaps: Dict[int, Any] = {}
+
+    def save(self, state, step: int, blocking: bool = True):
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        host = [np.array(x) for x in leaves]        # FORCED host copies
+        # (np.asarray would alias numpy inputs) — the snapshot can never
+        # see later in-place mutation or a donating engine's deletion
+        self._snaps[step] = jax.tree_util.tree_unflatten(treedef, host)
+        for s in sorted(self._snaps)[:-self.keep]:
+            del self._snaps[s]
+
+    def wait(self):
+        pass                                        # saves are synchronous
+
+    def steps(self) -> List[int]:
+        return sorted(self._snaps)
+
+    def restore(self, like=None, step: Optional[int] = None):
+        if not self._snaps:
+            raise FileNotFoundError("no snapshots published")
+        step = max(self._snaps) if step is None else step
+        return self._snaps[step], step
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = pathlib.Path(directory)

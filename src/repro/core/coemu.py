@@ -38,6 +38,7 @@ the drain, which vetoes the checkpoint before it can publish.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
@@ -270,22 +271,42 @@ class CommitStreamVerifier:
     veto (the barrier action never runs). Requires a losslessly sized
     commit FIFO (the ``default_shell_config`` contract); rows beyond what
     the FIFO kept are not checkable and are skipped.
+
+    Mid-stream resume (the farm's checkpointed-requeue protocol):
+    :meth:`snapshot` captures the oracle's position — host-copied state,
+    global step, and the number of batches consumed — and
+    :meth:`restore` rewinds to it, so a job evicted after N accepted
+    windows re-verifies from the barrier's oracle state instead of
+    replaying the oracle from step 0. Rewinding re-reads the batch
+    stream, so resume requires ``batches`` to be a sequence or a zero-arg
+    factory (a one-shot iterator can be consumed but never rewound).
     """
 
     def __init__(self, oracle_step: Callable, state, batches,
                  layers: int, rtol: float = 1e-5, start_step: int = 0):
         self.oracle_step = oracle_step
         self.state = state
-        self.batches = iter(batches)
+        self._batches_src = batches
+        self.batches = self._iter_batches()
         self.L = layers
         self.rtol = rtol
         self.step = start_step      # resume: report true global step ids
+        self._consumed = 0          # batches taken from the stream so far
+
+    def _iter_batches(self):
+        b = self._batches_src
+        return iter(b() if callable(b) else b)
+
+    def _next_batch(self):
+        batch = next(self.batches)
+        self._consumed += 1
+        return batch
 
     def __call__(self, last_step: int, records):
         rows = np.asarray(records["fifos"]["commits"]["data"], np.float64)
         steps = rows.shape[0] // self.L
         for s in range(steps):
-            batch = next(self.batches)
+            batch = self._next_batch()
             self.state, _, aux = self.oracle_step(self.state, batch)
             exp = np.asarray(layer_checksums(aux), np.float64)   # (L, 2)
             got = rows[s * self.L:(s + 1) * self.L, 1:]
@@ -296,6 +317,30 @@ class CommitStreamVerifier:
                 raise CommitDivergence(step=self.step + s, layer=l,
                                        rel_err=float(err[l]))
         self.step += steps
+
+    # ------------------------------------------------------------- resume --
+    def snapshot(self):
+        """Host-copied resume point (oracle state + stream position); the
+        farm publishes this with the job snapshot at every accepted
+        barrier commit."""
+        return {"state": jax.tree.map(np.asarray, self.state),
+                "step": np.int64(self.step),
+                "consumed": np.int64(self._consumed)}
+
+    def restore(self, snap):
+        """Rewind to a :meth:`snapshot`: subsequent drains re-verify from
+        that barrier's oracle state against a re-seeked batch stream."""
+        src = self._batches_src
+        if not callable(src) and iter(src) is src:
+            raise ValueError(
+                "CommitStreamVerifier resume needs a re-iterable batch "
+                "source (sequence or zero-arg factory); a one-shot "
+                "iterator cannot be rewound to the snapshot position")
+        self.state = snap["state"]
+        self.step = int(snap["step"])
+        self._consumed = int(snap["consumed"])
+        self.batches = itertools.islice(self._iter_batches(),
+                                        self._consumed, None)
 
 
 # ------------------------------------------------------------- multi-DUT ---

@@ -50,6 +50,14 @@ class Subsystem:
 
 def extract_block(params, cfg, layer_idx: int, rt: Runtime,
                   batch: int, seq: int) -> Subsystem:
+    if not 0 <= layer_idx < cfg.num_layers:
+        # smoke archs are tiny (granite-8b and glm4-9b have 2 decoder
+        # layers) — name the arch and its layer count instead of letting a
+        # bare IndexError escape from the stacked-params walk
+        raise ValueError(
+            f"layer_idx {layer_idx} out of range for arch {cfg.name!r}: "
+            f"{cfg.num_layers} decoder layers (valid: 0.."
+            f"{cfg.num_layers - 1})")
     target = None
     for idx, spec, tree in iter_layer_params(params, cfg):
         if idx == layer_idx:

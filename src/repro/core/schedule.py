@@ -103,7 +103,13 @@ class Client:
     ``Client(engine, windows, state, shell)`` behave identically.
     ``barriers`` are per-client :class:`DrainBarrier`\\ s — each client
     commits at its OWN window boundaries (the farm's per-job checkpoint
-    path), independent of its neighbors' progress."""
+    path), independent of its neighbors' progress.
+
+    ``start_step`` / ``start_index`` are the RESUME cursor: a client whose
+    window stream was cut at a committed barrier re-enters the pass with
+    the remaining windows only, and its plans carry the true global step /
+    window ids — so barrier ``fires`` math, ``on_drain`` cadence, and
+    tail-window sizing stay correct for non-divisible streams."""
     engine: Callable
     windows: Iterable
     state: Any = None
@@ -112,6 +118,8 @@ class Client:
     stack_fn: Any = _INHERIT
     reset: Any = _INHERIT
     barriers: Sequence = ()
+    start_step: int = 0
+    start_index: int = 0
 
 
 class ClientPolicy:
@@ -125,7 +133,7 @@ class ClientPolicy:
           indices are assigned in admission order and never reused.
       ``evict(k)`` -> True to cancel client *k* before its next dispatch.
           The client's in-flight (undrained) window is DISCARDED, not
-          flushed: an evicted job is requeued and replayed elsewhere, so
+          flushed: an evicted job is requeued and resumed elsewhere, so
           partial results must never reach ``on_drain`` twice.
       ``done(k, state, shell)`` — client *k* dispatched its last window and
           its final drain was delivered; its device slot is free (the
@@ -315,16 +323,19 @@ class WindowScheduler:
     def driver(self, client, *, key=None,
                on_drain: Optional[Callable] = None,
                on_dispatch: Optional[Callable] = None,
-               place_fn: Optional[Callable] = None) -> "ClientDriver":
+               place_fn: Optional[Callable] = None,
+               on_commit: Optional[Callable] = None) -> "ClientDriver":
         """A thread-confinable per-client pipeline over this scheduler's
         window/overlap settings (see :class:`ClientDriver`)."""
         return ClientDriver(self, client, key=key, on_drain=on_drain,
-                            on_dispatch=on_dispatch, place_fn=place_fn)
+                            on_dispatch=on_dispatch, place_fn=place_fn,
+                            on_commit=on_commit)
 
     def run_many(self, clients, on_drain: Optional[Callable] = None, *,
                  on_dispatch: Optional[Callable] = None,
                  place_fn: Optional[Callable] = None,
-                 policy: Optional[ClientPolicy] = None):
+                 policy: Optional[ClientPolicy] = None,
+                 on_commit: Optional[Callable] = None):
         """ZP-Farm pass: ``clients`` is a list of ``(engine, windows,
         state, shell)`` tuples or :class:`Client`\\ s (per-client drain /
         stack / reset / barriers). Window *w* of EVERY client is dispatched
@@ -346,12 +357,15 @@ class WindowScheduler:
         client's window dispatch is enqueued; ``place_fn(client_idx,
         stack)`` maps the stacked window payload right before the engine
         call (device placement); ``policy`` is a :class:`ClientPolicy` for
-        dynamic admission / eviction / slot-free notification. Returns the
-        list of final ``(state, shell)`` per client index (admitted clients
-        included, in admission order)."""
+        dynamic admission / eviction / slot-free notification;
+        ``on_commit(client_idx, plan, state, shell)`` fires after a
+        client's barrier actions committed a window boundary (the farm's
+        snapshot hook). Returns the list of final ``(state, shell)`` per
+        client index (admitted clients included, in admission order)."""
         def make(c):
             return self.driver(c, key=len(drivers), on_drain=on_drain,
-                               on_dispatch=on_dispatch, place_fn=place_fn)
+                               on_dispatch=on_dispatch, place_fn=place_fn,
+                               on_commit=on_commit)
 
         drivers: List[ClientDriver] = []
         for c in clients:
@@ -437,28 +451,39 @@ class ClientDriver:
           dispatched is in flight), in serial mode the window just
           dispatched. Runs any barriers the dispatched window crossed —
           a barrier flushes the in-flight window first, so an ``on_drain``
-          verifier that raises vetoes the commit action.
+          verifier that raises vetoes the commit action. When at least one
+          barrier committed, ``on_commit(key, plan, state, shell)`` fires
+          with the accepted boundary's state handle — the shell is the
+          live (post-reset) one the NEXT window consumes, i.e. exactly
+          what a resumed run must start from.
       ``flush()`` — retire the final pending window (stream end).
       ``cancel()`` — drop pending + dispatched windows undelivered and
-          mark the driver exhausted (eviction: a requeued job replays
-          elsewhere, so partial results must never reach ``on_drain``).
+          mark the driver exhausted (eviction: a requeued job re-runs its
+          uncommitted tail elsewhere, so partial results must never reach
+          ``on_drain``).
+
+    Resume: the client's ``start_step``/``start_index`` seed the window
+    cursor, so a driver over the TAIL of a window stream emits plans with
+    the same global ids an uninterrupted run would.
     """
 
     def __init__(self, sched: "WindowScheduler", client, *, key=None,
                  on_drain: Optional[Callable] = None,
                  on_dispatch: Optional[Callable] = None,
-                 place_fn: Optional[Callable] = None):
+                 place_fn: Optional[Callable] = None,
+                 on_commit: Optional[Callable] = None):
         self.sched = sched
         self.c = sched._normalize_client(client)
         self.key = key
         self.on_drain = on_drain
         self.on_dispatch = on_dispatch
         self.place_fn = place_fn
+        self.on_commit = on_commit
         self._it = iter(self.c.windows)
         self.state = self.c.state
         self.shell = self.c.shell
-        self.step = 0
-        self.index = 0
+        self.step = self.c.start_step
+        self.index = self.c.start_index
         self.pending = None             # (plan, snapshot, ys) awaiting drain
         self._dispatched = None         # window in flight this round
         self.exhausted = False
@@ -503,6 +528,7 @@ class ClientDriver:
                 snap, drain_fn=self.c.drain_fn)
             self.sched._emit(plan, records, ys, self.on_drain,
                              client=self.key)
+        committed = False
         for b in self.c.barriers:
             if b.fires(plan):
                 # commit barrier: every window up to the boundary must be
@@ -510,6 +536,9 @@ class ClientDriver:
                 # window's drain/compute overlap)
                 self.flush()
                 b.action(self.state, plan.boundary)
+                committed = True
+        if committed and self.on_commit is not None:
+            self.on_commit(self.key, plan, self.state, self.shell)
 
     def flush(self):
         pending, self.pending = self.pending, None

@@ -3,7 +3,8 @@
 The FireSim-manager analog for this repo: a job queue + device placement +
 per-device watchdogs + straggler eviction over one
 ``WindowScheduler.run_many`` pass."""
-from repro.farm.manager import FarmError, FarmJob, FarmManager  # noqa: F401
+from repro.farm.manager import (  # noqa: F401
+    FarmError, FarmJob, FarmManager, JobSnapshot)
 from repro.farm.placement import (  # noqa: F401
     DeviceSlot, enumerate_slots, place, place_stack)
 from repro.farm.telemetry import FarmTelemetry  # noqa: F401

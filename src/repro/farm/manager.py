@@ -46,20 +46,32 @@ Shared semantics (both modes):
     recorded fault, so a checkpoint never publishes past a rejected
     window);
   * dynamic admission when a slot frees; requeue onto a DIFFERENT slot
-    after eviction, replaying the window stream from the start, so an
-    evicted job's delivered outputs are bit-identical to an uninterrupted
-    run;
+    after eviction, so an evicted job's delivered outputs are
+    bit-identical to an uninterrupted run;
+  * checkpointed requeue (the paper's stop/inspect/resume contract at farm
+    scale): every ACCEPTED barrier commit publishes a host-side job
+    snapshot — engine carry, live shell, window/step cursor, and the
+    verifier's oracle position — through the checkpoint store's atomic
+    publish path (in-memory by default, ``FarmJob.snapshot_store`` for
+    on-disk). A requeued job restores the snapshot onto its NEW slot and
+    resumes its window plan at the cursor instead of replaying from window
+    0; delivered windows before the cursor are retained, so the
+    exactly-once ``on_drain`` sink still sees every window once, in order.
+    A vetoed commit publishes NOTHING — a faulted attempt resumes from the
+    barrier *before* the rejected window;
   * drain-veto fault handling — a job's ``verify`` raising at a drain
     counts a veto, faults the job, and takes the same evict + requeue
     path (a board whose outputs are wrong is as evictable as a slow one).
 
-Caveat for donating engines: requeue replays from ``FarmJob.state``; on
-backends where donation is real, pass ``state``/``shell`` as zero-arg
-factories so each attempt gets fresh buffers (on CPU donation is a no-op).
+Donating engines are requeue-safe: admission dispatches from fresh copies
+of ``FarmJob.state``/``shell`` (or from zero-arg factories), and snapshots
+are host copies — a donated-and-deleted device buffer is never a replay
+source.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import queue as queue_mod
 import threading
 import time
@@ -67,7 +79,10 @@ from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint.manager import MemorySnapshotStore
 from repro.core.schedule import (Client, ClientPolicy, DrainBarrier,
                                  WindowScheduler)
 from repro.core.watchdog import Watchdog
@@ -80,19 +95,46 @@ class FarmError(RuntimeError):
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class JobSnapshot:
+    """Resume cursor of a job's last ACCEPTED barrier commit. The payload
+    (state/shell/verifier host copies) lives in the job's snapshot store
+    under ``step``; this handle carries only where the stream resumes:
+    windows ``[0, window)`` / steps ``[0, step)`` are committed."""
+    step: int
+    window: int
+
+
+def _replay_copy(tree):
+    """Fresh-buffer copy of a state/shell pytree. A donating engine
+    DELETES the buffers it is handed (and same-device ``device_put`` may
+    alias rather than copy), so every farm attempt must dispatch from
+    copies — the job's own ``state``/``shell`` stay valid replay sources
+    across requeues."""
+    return jax.tree.map(
+        lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x, tree)
+
+
 @dataclasses.dataclass
 class FarmJob:
     """One farm workload. ``windows`` is a list of per-step item lists (or
     a zero-arg factory returning a fresh iterable — required if the stream
-    cannot be materialized) so eviction can replay it from the start.
+    cannot be materialized) so a requeued attempt can re-read it from its
+    resume cursor.
     ``verify(plan, records, ys)`` raises to veto a window (stateless — it
     re-runs on replay; in async mode it runs on the job's slot thread);
     ``on_drain(plan, records, ys)`` is the exactly-once, in-order sink
     delivered at completion on the control thread. ``barriers`` are
     per-job :class:`DrainBarrier`\\ s (e.g. checkpoint saves) whose
     actions are skipped while the job has a recorded fault — the
-    commit-veto contract. ``drain_fn`` / ``stack_fn`` / ``reset`` are the
-    per-client scheduler plumbing (``None`` = shell-less)."""
+    commit-veto contract; every ACCEPTED commit also publishes a resume
+    snapshot to ``snapshot_store`` (``None`` = an in-memory
+    :class:`~repro.checkpoint.MemorySnapshotStore`; pass a per-job
+    ``CheckpointManager`` for on-disk durability). ``verify`` may expose
+    ``snapshot()``/``restore(snap)`` (the ``CommitStreamVerifier``
+    protocol) to ride the same resume point. ``drain_fn`` / ``stack_fn``
+    / ``reset`` are the per-client scheduler plumbing (``None`` =
+    shell-less)."""
     name: str
     engine: Callable
     windows: Any
@@ -106,6 +148,7 @@ class FarmJob:
     barriers: Sequence[DrainBarrier] = ()
     capture: Any = None                 # roofline.WindowCapture, optional
     max_requeues: int = 1
+    snapshot_store: Any = None          # CheckpointManager-like, per job
 
     # ----- runtime bookkeeping (owned by the manager) -----
     requeues: int = dataclasses.field(default=0, init=False)
@@ -114,6 +157,13 @@ class FarmJob:
     error: Optional[str] = dataclasses.field(default=None, init=False)
     last_slot: Optional[str] = dataclasses.field(default=None, init=False)
     windows_drained: int = dataclasses.field(default=0, init=False)
+    snapshot: Optional[JobSnapshot] = dataclasses.field(
+        default=None, init=False)       # last accepted commit's cursor
+    windows_replayed: int = dataclasses.field(default=0, init=False)
+    committed_outputs: List = dataclasses.field(
+        default_factory=list, init=False)   # delivered prefix [0, cursor)
+    _snap_like: Any = dataclasses.field(default=None, init=False)
+    _verify_init: Any = dataclasses.field(default=None, init=False)
 
     def _window_iter(self):
         w = self.windows() if callable(self.windows) else self.windows
@@ -121,7 +171,7 @@ class FarmJob:
 
     def _initial(self, attr):
         v = getattr(self, attr)
-        return v() if callable(v) else v
+        return v() if callable(v) else _replay_copy(v)
 
 
 class _Run:
@@ -141,6 +191,8 @@ class _Run:
         self.evict_flag = threading.Event()
         self.evict_why: Optional[str] = None
         self.closed = False
+        self.start_window = 0           # resume cursor this attempt began at
+        self.snapshot: Optional[JobSnapshot] = None     # latest commit here
 
 
 _STOP = object()
@@ -211,16 +263,20 @@ class _SlotWorker(threading.Thread):
                                 wall_s=mgr.clock() - t0)
             mgr._results.put(("drain", run, plan, records, ys))
 
+        def on_commit(k, plan, state, shell):
+            # an accepted barrier commit publishes the job's resume point;
+            # a faulted or eviction-marked attempt publishes NOTHING (the
+            # veto contract: resume from the barrier BEFORE the rejection)
+            if run.closed or run.fault is not None \
+                    or run.evict_flag.is_set():
+                return
+            mgr._publish_snapshot(run, plan, state, shell)
+
         try:
-            client = Client(
-                engine=job.engine, windows=job._window_iter(),
-                state=place(job._initial("state"), self.slot),
-                shell=place(job._initial("shell"), self.slot),
-                drain_fn=job.drain_fn, stack_fn=job.stack_fn,
-                reset=job.reset, barriers=mgr._gated_barriers(run))
+            client = mgr._client_for(run, self.slot)
             driver = mgr.sched.driver(
                 client, key=run.idx, on_drain=on_drain,
-                on_dispatch=on_dispatch,
+                on_dispatch=on_dispatch, on_commit=on_commit,
                 place_fn=lambda k, stack: place_stack(stack, self.slot))
             while True:
                 t0 = mgr.clock()
@@ -342,7 +398,8 @@ class FarmManager(ClientPolicy):
             # with _next_idx and the callbacks route to the right _Run
             self.sched.run_many([], on_drain=self._on_drain,
                                 on_dispatch=self._on_dispatch,
-                                place_fn=self._place, policy=self)
+                                place_fn=self._place, policy=self,
+                                on_commit=self._on_commit)
         report = self.report()
         if strict:
             failed = [n for n, j in report["jobs"].items()
@@ -358,6 +415,9 @@ class FarmManager(ClientPolicy):
                               "windows": j.windows_drained,
                               "requeues": j.requeues,
                               "slot": j.last_slot,
+                              "windows_committed": (j.snapshot.window
+                                                    if j.snapshot else 0),
+                              "windows_replayed": j.windows_replayed,
                               "error": j.error} for j in self.jobs},
             "telemetry": self.telemetry.report(),
         }
@@ -511,6 +571,17 @@ class FarmManager(ClientPolicy):
         HUNG mid-dispatch (it cannot even reach an eviction check). The
         board is written off: its thread is left to the OS (daemon), the
         slot never returns to the pool, and the job requeues elsewhere."""
+        # ingest everything already posted before writing the run off: the
+        # hung board's last drains may still sit in the results queue, and
+        # the requeue's committed-prefix math needs them in run.outputs
+        while True:
+            try:
+                msg = self._results.get_nowait()
+            except queue_mod.Empty:
+                break
+            self._handle_async(msg)
+        if run.closed:          # the drained backlog finished the run
+            return
         run.closed = True
         run.evict_flag.set()            # if the thread ever wakes, stop it
         self._running.pop(run.idx, None)
@@ -531,6 +602,80 @@ class FarmManager(ClientPolicy):
             self._requeue_or_fail(staged, "slot lost (hung board)")
         self._requeue_or_fail(run, "hung board (liveness timeout)")
 
+    # ------------------------------------------------- checkpointed resume --
+    def _publish_snapshot(self, run: _Run, plan, state, shell):
+        """Publish the job's resume point at an accepted barrier commit
+        (runs on the thread that owns the job's JAX state — the slot
+        thread in async mode). The payload is host-copied by the store's
+        save, so it survives donation and slot loss; the cursor handle on
+        the run is what the control plane reads at requeue time."""
+        job = run.job
+        vsnap = (job.verify.snapshot()
+                 if hasattr(job.verify, "snapshot") else {})
+        tree = {"state": state, "shell": shell, "verify": vsnap,
+                "cursor": {"step": np.int64(plan.boundary),
+                           "window": np.int64(plan.index + 1)}}
+        if job.snapshot_store is None:
+            job.snapshot_store = MemorySnapshotStore(keep=2)
+        job.snapshot_store.save(tree, step=plan.boundary)   # atomic publish
+        # structure-only skeleton for CheckpointManager.restore's `like`
+        job._snap_like = jax.tree.map(lambda _: 0, tree)
+        run.snapshot = JobSnapshot(step=plan.boundary,
+                                   window=plan.index + 1)
+
+    def _client_for(self, run: _Run, slot: DeviceSlot) -> Client:
+        """Build the attempt's scheduler client: from the job's initial
+        state (fresh copies — donation-safe) on a first attempt, or from
+        its last accepted snapshot on a requeue — the window stream is
+        sliced at the cursor and the plans keep their global step/window
+        ids, so tail windows, barrier cadence, and the on_drain order are
+        exactly an uninterrupted run's."""
+        job = run.job
+        snap = job.snapshot
+        if snap is None:
+            state = place(job._initial("state"), slot)
+            shell = place(job._initial("shell"), slot)
+            if hasattr(job.verify, "restore") \
+                    and hasattr(job.verify, "snapshot"):
+                if job._verify_init is None:    # first admission: remember
+                    job._verify_init = job.verify.snapshot()
+                else:
+                    # no-snapshot requeue (evicted before any accepted
+                    # barrier): the stream replays from window 0, so a
+                    # stateful verifier must rewind to its starting
+                    # position too — not stay advanced mid-stream
+                    job.verify.restore(job._verify_init)
+            windows = job._window_iter()
+            start_step = start_index = 0
+        else:
+            job.snapshot_store.wait()
+            tree, _ = job.snapshot_store.restore(job._snap_like,
+                                                 step=snap.step)
+            state = place(tree["state"], slot)
+            shell = place(tree["shell"], slot)
+            if hasattr(job.verify, "restore") and tree.get("verify"):
+                job.verify.restore(tree["verify"])
+            windows = itertools.islice(job._window_iter(), snap.window,
+                                       None)
+            start_step, start_index = snap.step, snap.window
+            self.telemetry.resume(slot.name, job.name, snap.window,
+                                  snap.step)
+        run.start_window = start_index
+        return Client(engine=job.engine, windows=windows, state=state,
+                      shell=shell, drain_fn=job.drain_fn,
+                      stack_fn=job.stack_fn, reset=job.reset,
+                      barriers=self._gated_barriers(run),
+                      start_step=start_step, start_index=start_index)
+
+    def _on_commit(self, k: int, plan, state, shell):
+        """Lockstep snapshot hook (the async path is the slot worker's
+        closure): publish unless the attempt is faulted — the veto
+        contract keeps the resume point BEFORE a rejected window."""
+        run = self._running.get(k)
+        if run is None or run.fault is not None:
+            return
+        self._publish_snapshot(run, plan, state, shell)
+
     def _gated_barriers(self, run: _Run):
         """Per-attempt barrier wrappers: a barrier action (e.g. a
         checkpoint save) is skipped while the run has a recorded fault —
@@ -549,11 +694,15 @@ class FarmManager(ClientPolicy):
         job = run.job
         self._force.discard(job.name)   # a stale mark must not outlive us
         job.status = "done"
-        job.windows_drained = len(run.outputs)
+        # delivered stream = committed prefix retained across evictions +
+        # this (final) attempt's windows from its resume cursor onward —
+        # every window exactly once, in window order
+        outputs = job.committed_outputs + run.outputs
+        job.windows_drained = len(outputs)
         self.results[job.name] = (state, shell)
-        self.outputs[job.name] = run.outputs
+        self.outputs[job.name] = outputs
         if job.on_drain is not None:
-            for plan, records, ys in run.outputs:   # exactly-once, in order
+            for plan, records, ys in outputs:       # exactly-once, in order
                 job.on_drain(plan, records, ys)
 
     # ----------------------------------------------- ClientPolicy protocol --
@@ -643,11 +792,7 @@ class FarmManager(ClientPolicy):
         run = _Run(job, slot, k)
         self._running[k] = run
         self.wd.heartbeat(slot.name, gap=False)
-        return Client(engine=job.engine, windows=job._window_iter(),
-                      state=place(job._initial("state"), slot),
-                      shell=place(job._initial("shell"), slot),
-                      drain_fn=job.drain_fn, stack_fn=job.stack_fn,
-                      reset=job.reset, barriers=self._gated_barriers(run))
+        return self._client_for(run, slot)
 
     def _process_evictions(self):
         """Drain-boundary eviction sweep: watchdog stragglers + forced
@@ -676,20 +821,38 @@ class FarmManager(ClientPolicy):
 
     def _requeue_or_fail(self, run: _Run, why: str):
         """Shared evict/fault tail (boundary sweep AND the done()-path
-        fault on a job's final window): clear the slot's duration history
-        so its next tenant is not judged against the evicted job's, drop
-        any stale force mark, then requeue or fail on budget."""
+        fault on a job's final window): adopt the attempt's last accepted
+        snapshot as the job's resume point and retain the delivered
+        windows up to its cursor, clear the slot's duration history so its
+        next tenant is not judged against the evicted job's, drop any
+        stale force mark, then requeue or fail on budget."""
         job = run.job
+        if (run.snapshot is not None and run.snapshot.window
+                - run.start_window <= len(run.outputs)):
+            # windows [start_window, snapshot.window) of this attempt are
+            # committed: they extend the exactly-once delivered prefix and
+            # will never re-run (a snapshot whose windows never reached the
+            # control plane — a board hung between commit and hand-off —
+            # is NOT adopted: the job resumes from its previous cursor)
+            job.committed_outputs.extend(
+                run.outputs[:run.snapshot.window - run.start_window])
+            job.snapshot = run.snapshot
+        cursor = job.snapshot.window if job.snapshot else 0
+        # work lost to the eviction: drained-but-uncommitted windows that
+        # the resumed attempt must re-run (0 when the evict landed on a
+        # commit; the whole attempt under the legacy no-barrier replay)
+        job.windows_replayed += max(
+            0, run.start_window + len(run.outputs) - cursor)
         self.wd.forget(run.slot.name)
         self._force.discard(job.name)
         self.telemetry.eviction(run.slot.name, job.name, why)
         if job.capture is not None:
-            job.capture.reset()
+            job.capture.reset(upto=cursor)  # committed rows stay
         if job.requeues < job.max_requeues:
             job.requeues += 1
             job.status = "queued"
             self._avoid[job.name] = run.slot.name
-            self.queue.appendleft(job)      # partial outputs discarded
+            self.queue.appendleft(job)      # uncommitted outputs discarded
         else:
             job.status = "failed"
             job.error = why

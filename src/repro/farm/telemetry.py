@@ -55,6 +55,7 @@ class FarmTelemetry:
         self.windows = defaultdict(int)         # slot -> drained windows
         self.vetoes = defaultdict(int)          # slot -> drain vetoes
         self.evictions: List[Tuple[str, str, str]] = []  # (slot, job, why)
+        self.resumes: List[Dict] = []           # snapshot-resumed requeues
         self.occupancy_samples: List[Tuple[int, int]] = []
         self._t: Dict[Tuple[str, object], float] = {}
         self._lock = threading.Lock()
@@ -100,6 +101,14 @@ class FarmTelemetry:
         with self._lock:
             self.evictions.append((slot, job, why))
 
+    def resume(self, slot: str, job: str, window: int, step: int):
+        """A requeued job restored its barrier snapshot onto ``slot`` and
+        resumed its window plan at ``window`` (= committed windows it did
+        NOT replay)."""
+        with self._lock:
+            self.resumes.append({"slot": slot, "job": job,
+                                 "window": int(window), "step": int(step)})
+
     def occupancy(self, active: int, total: int):
         with self._lock:
             self.occupancy_samples.append((active, total))
@@ -124,6 +133,7 @@ class FarmTelemetry:
                 }
             occ = list(self.occupancy_samples)
             evs = list(self.evictions)
+            resumes = [dict(r) for r in self.resumes]
             vetoes = sum(self.vetoes.values())
         return {
             "devices": devices,
@@ -134,6 +144,7 @@ class FarmTelemetry:
             "drain_vetoes": vetoes,
             "evictions": [{"slot": s, "job": j, "why": w}
                           for s, j, w in evs],
+            "resumes": resumes,
         }
 
     def summary(self) -> str:
@@ -142,7 +153,8 @@ class FarmTelemetry:
                  f"occupancy mean {r['occupancy_mean']:.2f} "
                  f"peak {r['occupancy_peak']}, "
                  f"{r['drain_vetoes']} drain vetoes, "
-                 f"{len(r['evictions'])} evictions"]
+                 f"{len(r['evictions'])} evictions, "
+                 f"{len(r['resumes'])} snapshot resumes"]
         for slot, d in r["devices"].items():
             w = d["window_ms"]
             line = f"  {slot}: {d['windows']} windows"

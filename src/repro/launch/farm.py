@@ -28,6 +28,16 @@ measured per-window WALL time alone — the wall-time-divergence gate the CI
 completes verified — and, when a straggler was injected, unless it was
 actually evicted (in async mode: evicted specifically as a ``straggler``),
 requeued, and still delivered correct outputs.
+
+``--restart-smoke`` is the checkpointed-requeue gate (CI
+``farm-restart-smoke``): a long board with per-window checkpoint barriers
+is evicted mid-stream and must RESUME from its last accepted snapshot —
+the run exits non-zero unless the job re-ran fewer windows than it had
+committed (``windows_replayed < windows_committed``), resumed through the
+telemetry resume log, and still delivered bit-identical outputs:
+
+  PYTHONPATH=src python -m repro.launch.farm --restart-smoke
+  PYTHONPATH=src python -m repro.launch.farm --restart-smoke --lockstep
 """
 from __future__ import annotations
 
@@ -42,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
-from repro.core import plan_windows
+from repro.core import DrainBarrier, plan_windows
 from repro.core.commit import default_shell_config, make_ingest
 from repro.core.pshell import PShell, drain, shell_init, stack_batches
 from repro.core.coemu import submit_subsystem_jobs
@@ -79,9 +89,9 @@ def submit_train_job(mgr, cfg, steps, interval, batch=2, seq=16, seed=0,
 
     state = init_state(model, jax.random.key(seed))
     if capture is not None:
-        capture.attach_cost(engine, state, shell.init(),
-                            stack_batches(windows[0]),
-                            window_size=len(windows[0]))
+        # the board's own first compile is the HLO cost source — no
+        # dry-run second lowering (attach_cost is the offline path)
+        engine = capture.attach_engine(engine)
     mgr.submit(FarmJob(
         name="train", engine=engine, windows=windows,
         state=state, shell=shell.init(),
@@ -202,6 +212,77 @@ def submit_soak_straggler(mgr, n_windows: int = 150,
     return board
 
 
+def submit_restart_board(mgr, n_windows: int = 40, evict_at: int = 8,
+                         delay: float = 0.02) -> SoakBoard:
+    """A long board with a checkpoint barrier at EVERY window boundary,
+    for the checkpointed-requeue gate: its verify force-marks the job
+    mid-stream (first attempt only), so the eviction lands with committed
+    snapshots behind it and the requeued attempt must resume from the
+    last accepted barrier instead of window 0. The per-window ``delay``
+    keeps attempt 1 slow enough that the async control plane's sweep can
+    signal the mark at a drain boundary; the replay runs full speed."""
+    @jax.jit
+    def _body(state, stack):
+        return state + jnp.sum(stack), stack * 2.0
+
+    def engine(state, shell, stack):
+        if board.job.attempts == 1:
+            time.sleep(delay)
+        s, ys = _body(state, stack)
+        return s, shell, ys
+
+    items = [np.float32(i) for i in range(n_windows)]
+    expected = [np.asarray([x * 2.0], np.float32) for x in items]
+    outs: list = []
+    marked = {"done": False}
+
+    def verify(plan, records, ys):
+        np.testing.assert_array_equal(np.asarray(ys), expected[plan.start])
+        if plan.index >= evict_at and not marked["done"]:
+            marked["done"] = True
+            mgr.force_evict("restart")
+
+    board = SoakBoard(
+        job=FarmJob(
+            name="restart", engine=engine, windows=[[x] for x in items],
+            state=jnp.float32(0), shell={},
+            stack_fn=lambda it: jnp.asarray(np.stack(it)), verify=verify,
+            on_drain=lambda p, r, y: outs.append(np.asarray(y)),
+            barriers=(DrainBarrier(every=1, action=lambda s, b: None),)),
+        outputs=outs, expected=expected)
+    mgr.submit(board.job)
+    return board
+
+
+def run_restart_smoke(mode: str = "async", slots: int = 3) -> dict:
+    """The ``farm-restart-smoke`` gate: a mid-stream eviction must resume
+    from the job's last accepted drain-barrier snapshot. Exits non-zero
+    (via ``ok``) unless the evicted board requeued, replayed FEWER windows
+    than it had committed, logged a snapshot resume, and still delivered
+    outputs bit-identical to an uninterrupted run."""
+    mgr = FarmManager(slots=slots, mode=mode, evict_stragglers=False)
+    board = submit_restart_board(mgr)
+    report = mgr.run(strict=False)
+    j = report["jobs"]["restart"]
+    resumes = report["telemetry"]["resumes"]
+    ok = (j["status"] == "done"
+          and j["requeues"] >= 1
+          and j["windows_committed"] > 0
+          and j["windows_replayed"] < j["windows_committed"]
+          and any(r["job"] == "restart" and r["window"] > 0
+                  for r in resumes)
+          and board.preserved())
+    return {
+        "mode": mode,
+        "jobs": report["jobs"],
+        "resumes": resumes,
+        "evictions": report["telemetry"]["evictions"],
+        "preserved": board.preserved(),
+        "windows_delivered": len(board.outputs),
+        "ok": ok,
+    }
+
+
 def run_farm(arch: str, steps: int, slots, interval: int = 2,
              synthetic_straggler: bool = False, straggler_factor: float = 6.0,
              roofline: bool = False, seed: int = 0,
@@ -300,6 +381,11 @@ def main():
     ap.add_argument("--synthetic-straggler", action="store_true")
     ap.add_argument("--straggler-factor", type=float, default=6.0)
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--restart-smoke", action="store_true",
+                    help="checkpointed-requeue gate: a mid-stream "
+                         "eviction must resume from the last accepted "
+                         "barrier snapshot (replayed < committed) with "
+                         "bit-identical outputs")
     g = ap.add_mutually_exclusive_group()
     g.add_argument("--async", dest="mode", action="store_const",
                    const="async", default="async",
@@ -309,6 +395,13 @@ def main():
                    help="single-thread round-robin host loop (the "
                         "bit-identity oracle)")
     args = ap.parse_args()
+
+    if args.restart_smoke:
+        out = run_restart_smoke(mode=args.mode, slots=args.slots)
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
 
     out = run_farm(args.arch, args.steps, args.slots,
                    interval=args.sample_interval,

@@ -85,7 +85,10 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     t1 = time.perf_counter()
 
-    engine = make_decode_engine(model, params)
+    # measured-window roofline capture rides the decode loop by default;
+    # attach_engine makes the loop's own first compile the HLO cost source
+    capture = WindowCapture()
+    engine = capture.attach_engine(make_decode_engine(model, params))
     # reset defaults to the cached jitted group_reset (P-Shell drain_fn)
     sched = WindowScheduler(interval=max(1, sample_interval), overlap=True,
                             drain_fn=drain)
@@ -111,8 +114,6 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
                          * 1e3)
         fifo_rows += records["fifos"]["decode"]["count"]
 
-    # measured-window roofline capture rides the decode loop by default
-    capture = WindowCapture()
     od, odr = capture.callbacks(on_dispatch=on_dispatch, on_drain=on_drain)
     (cache, tok), _, sh = sched.run(
         engine, sched.windows(range(gen - 1)), (cache, tok), sh,

@@ -1,4 +1,4 @@
 from repro.roofline.hw import HW_V5E  # noqa: F401
 from repro.roofline.hlo import collective_summary  # noqa: F401
 from repro.roofline.capture import (  # noqa: F401
-    WindowCapture, engine_cost, save_measured)
+    CostCapturingEngine, WindowCapture, engine_cost, save_measured)

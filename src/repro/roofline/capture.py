@@ -22,6 +22,9 @@ import pathlib
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+import jax
+import numpy as np
+
 from repro.roofline.hw import Hardware, HW_V5E
 
 
@@ -38,16 +41,69 @@ def save_measured(report: Dict[str, Any], arch: str, source: str,
     return str(path)
 
 
-def engine_cost(jitted_engine, *sample_args) -> Dict[str, float]:
-    """HLO cost of one window dispatch: lower + compile the jitted engine
-    on sample args and read ``cost_analysis`` (flops / bytes accessed).
-    Nothing executes — this is the dry-run path the static roofline uses."""
-    compiled = jitted_engine.lower(*sample_args).compile()
+def compiled_cost(compiled) -> Dict[str, float]:
+    """flops / bytes-accessed from a compiled executable's
+    ``cost_analysis`` (normalized across jaxlib versions)."""
     ca = compiled.cost_analysis() or {}
     if isinstance(ca, (list, tuple)):      # older jaxlibs return [dict]
         ca = ca[0] if ca else {}
     return {"flops": float(ca.get("flops", 0) or 0),
             "bytes": float(ca.get("bytes accessed", 0) or 0)}
+
+
+def engine_cost(jitted_engine, *sample_args) -> Dict[str, float]:
+    """HLO cost of one window dispatch: lower + compile the jitted engine
+    on sample args and read ``cost_analysis`` (flops / bytes accessed).
+    Nothing executes — this is the dry-run path the static roofline uses.
+    For a running workload prefer :meth:`WindowCapture.attach_engine`,
+    which reads the cost off the run's own FIRST compile instead of
+    paying this second lowering."""
+    return compiled_cost(jitted_engine.lower(*sample_args).compile())
+
+
+def _arg_signature(args):
+    """Hashable (structure, per-leaf shape/dtype/sharding) key — one AOT
+    executable per distinct window signature (the tail window of a
+    non-divisible stream compiles once more, exactly as jit would).
+    Metadata only: leaves include the previous window's still-in-flight
+    state, so nothing here may materialize a value (a ``getattr`` default
+    of ``np.asarray(x)`` would evaluate EAGERLY and block the pipeline on
+    every dispatch)."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    sig = []
+    for x in leaves:
+        dt = getattr(x, "dtype", None)
+        if dt is None:                      # python-scalar leaf
+            dt = np.asarray(x).dtype
+        sig.append((tuple(np.shape(x)), str(dt),
+                    str(getattr(x, "sharding", None))))
+    return treedef, tuple(sig)
+
+
+class CostCapturingEngine:
+    """Engine wrapper that makes the run's own FIRST jit compile the HLO
+    cost source (ROADMAP: cost attribution by default, no second
+    lowering). Dispatch goes through the jitted engine's AOT executable —
+    ``lower().compile()`` on first use per argument signature, the exact
+    compile a plain jitted call would have paid, with donation semantics
+    preserved — and ``cost_analysis`` is read off that executable instead
+    of a dedicated dry-run compile. ``cost`` holds the first (full-size)
+    window's flops/bytes once compiled."""
+
+    def __init__(self, jitted_engine):
+        self._jitted = jitted_engine
+        self._exec: Dict[Any, Any] = {}
+        self.cost: Optional[Dict[str, float]] = None
+
+    def __call__(self, *args):
+        key = _arg_signature(args)
+        ex = self._exec.get(key)
+        if ex is None:
+            ex = self._jitted.lower(*args).compile()
+            self._exec[key] = ex
+            if self.cost is None:
+                self.cost = compiled_cost(ex)
+        return ex(*args)
 
 
 class WindowCapture:
@@ -88,6 +144,26 @@ class WindowCapture:
         self._cost_window = max(1, window_size)
         return self
 
+    def attach_engine(self, jitted_engine):
+        """Wrap a jitted ``(state, shell, stack)`` engine so the run's own
+        first compile supplies this capture's per-window HLO cost — no
+        second lowering (contrast :meth:`attach_cost`, the dry-run path).
+        The window size for tail scaling is read from the first dispatched
+        stack's leading dimension. Returns the wrapped engine; hand THAT
+        to the scheduler."""
+        wrapped = CostCapturingEngine(jitted_engine)
+
+        def engine(state, shell, stack):
+            publish = self._cost is None
+            out = wrapped(state, shell, stack)
+            if publish and wrapped.cost is not None:
+                leaves = jax.tree_util.tree_leaves(stack)
+                g = int(np.shape(leaves[0])[0]) if leaves else 1
+                self.set_cost(wrapped.cost, window_size=max(1, g))
+            return out
+
+        return engine
+
     # -------------------------------------------------------- callbacks ---
     def on_dispatch(self, plan, state):
         self._t[plan.index] = self.clock()
@@ -121,10 +197,16 @@ class WindowCapture:
 
         return dispatch, drain
 
-    def reset(self):
-        """Drop recorded rows and in-flight timestamps (farm eviction: the
-        requeued job replays its stream from window 0)."""
-        self.rows.clear()
+    def reset(self, upto: Optional[int] = None):
+        """Drop in-flight timestamps and recorded rows from window
+        ``upto`` onward (farm eviction: the requeued job resumes at its
+        snapshot cursor, so rows for committed windows stay and only the
+        discarded tail is re-recorded; ``None`` clears everything — the
+        no-snapshot full replay)."""
+        if upto:
+            self.rows = [r for r in self.rows if r["window"] < upto]
+        else:
+            self.rows.clear()
         self._t.clear()
 
     # ----------------------------------------------------------- report ---

@@ -156,8 +156,9 @@ def measured_section(measured) -> str:
         "",
         "`s/step` is pipelined wall (drain of window *i* lands while "
         "window *i+1* is in flight), so achieved rates are a LOWER bound "
-        "on device throughput. Rows without cost columns ran without an "
-        "`attach_cost` compile (the default: wall-only capture).",
+        "on device throughput. HLO cost rides the engine's own first "
+        "compile (`attach_engine`, the default for train/serve); rows "
+        "without cost columns came from a capture with no cost source.",
         "",
         "| arch | source | windows | steps | s/step | achieved TF/s | "
         "peak flops | peak HBM |",

@@ -107,9 +107,10 @@ def train_loop(model, loop_cfg: LoopConfig,
     prof = Profiler(sample_interval=loop_cfg.sample_interval)
     wd = Watchdog(timeout_s=loop_cfg.watchdog_timeout_s)
     cov = CoverageMap()
-    # measured-window roofline capture rides every run by default (wall
-    # times only — attaching HLO cost would force a second compile; see
-    # WindowCapture.attach_cost for callers that want it)
+    # measured-window roofline capture rides every run by default; the
+    # fused engine routes dispatch through capture.attach_engine, so HLO
+    # cost comes off the run's own first compile — flops/bytes with no
+    # second lowering
     capture = WindowCapture()
     pipe = SyntheticPipeline(cfg, loop_cfg.batch, loop_cfg.seq,
                              seed=loop_cfg.seed, start_step=start_step)
@@ -187,6 +188,9 @@ def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
         make_group_step(model, opt_cfg, ingest=ingest,
                         grad_compress=loop_cfg.grad_compress,
                         accum_steps=loop_cfg.accum_steps))
+    if capture is not None:
+        # the run's first compile doubles as the roofline cost source
+        group_fn = capture.attach_engine(group_fn)
     sched = shell.scheduler(overlap=True, timer=prof)
 
     def emit(plan, records, metrics):
