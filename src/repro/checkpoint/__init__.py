@@ -1,2 +1,3 @@
 from repro.checkpoint.manager import (  # noqa: F401
-    CheckpointManager, MemorySnapshotStore, step_to_window)
+    CheckpointManager, MemorySnapshotStore, SnapshotIntegrityError,
+    step_to_window)

@@ -10,8 +10,13 @@ Contract pieces that matter at 1000+ nodes:
     mid-save can never corrupt the latest checkpoint;
   - async: the device-to-host copy happens at save() call, the file I/O in a
     background thread (training continues — the paper's "PS handles slow
-    work off the DUT clock");
-  - integrity: per-leaf crc32 verified on restore (detects torn writes);
+    work off the DUT clock"); a background write that FAILS is never
+    silent — the error is recorded and re-raised on the next ``wait()``
+    or ``save()`` call;
+  - integrity: per-leaf crc32 verified on restore (detects torn writes),
+    raised as :class:`SnapshotIntegrityError`; ``restore(fallback=True)``
+    walks back to the newest VERIFIABLE snapshot instead of raising on a
+    corrupt/partial one (the farm's chaos-recovery path);
   - elastic restore: arrays are loaded by LOGICAL path and re-device_put
     with the NEW mesh's shardings — restoring a 512-chip checkpoint onto a
     256-chip mesh is the same code path (tested);
@@ -70,6 +75,28 @@ def _leaf_paths(tree) -> List[str]:
     return paths
 
 
+class SnapshotIntegrityError(IOError):
+    """A snapshot failed its content-digest check (torn write, truncated
+    directory, bit flip). Carries the offending ``step`` so a fallback
+    path can log exactly which snapshot was written off."""
+
+    def __init__(self, message: str, step: Optional[int] = None):
+        super().__init__(message)
+        self.step = step
+
+
+def _tree_digest(leaves) -> int:
+    """Order-sensitive crc32 over every leaf's raw bytes — the snapshot's
+    content digest. Cheap enough to run at every save/restore (a few GB/s
+    on one core) and catches the failure that matters here: a snapshot
+    whose bytes are not the bytes that were published."""
+    crc = 0
+    for x in leaves:
+        arr = np.asarray(x)
+        crc = zlib.crc32(arr.tobytes(), crc)
+    return crc
+
+
 def step_to_window(step: int, interval: int) -> int:
     """Step→window mapping for resume cursors: the number of
     ``interval``-sized windows fully contained in ``step`` committed steps
@@ -96,15 +123,18 @@ class MemorySnapshotStore:
     def __init__(self, keep: int = 2):
         self.keep = keep
         self._snaps: Dict[int, Any] = {}
+        self._digests: Dict[int, int] = {}
 
     def save(self, state, step: int, blocking: bool = True):
         leaves, treedef = jax.tree_util.tree_flatten(state)
         host = [np.array(x) for x in leaves]        # FORCED host copies
         # (np.asarray would alias numpy inputs) — the snapshot can never
         # see later in-place mutation or a donating engine's deletion
+        self._digests[step] = _tree_digest(host)
         self._snaps[step] = jax.tree_util.tree_unflatten(treedef, host)
         for s in sorted(self._snaps)[:-self.keep]:
             del self._snaps[s]
+            self._digests.pop(s, None)
 
     def wait(self):
         pass                                        # saves are synchronous
@@ -112,11 +142,30 @@ class MemorySnapshotStore:
     def steps(self) -> List[int]:
         return sorted(self._snaps)
 
-    def restore(self, like=None, step: Optional[int] = None):
+    def verify(self, step: int) -> bool:
+        """Re-digest a snapshot's leaves against the digest recorded at
+        save time — False means the stored bytes were mutated after
+        publish (in-process corruption: a buggy caller writing into a
+        restored-and-aliased array, or chaos injection)."""
+        if step not in self._snaps:
+            return False
+        return (_tree_digest(jax.tree_util.tree_leaves(self._snaps[step]))
+                == self._digests.get(step))
+
+    def restore(self, like=None, step: Optional[int] = None,
+                fallback: bool = False):
         if not self._snaps:
             raise FileNotFoundError("no snapshots published")
         step = max(self._snaps) if step is None else step
-        return self._snaps[step], step
+        candidates = [step] + ([s for s in sorted(self._snaps, reverse=True)
+                                if s < step] if fallback else [])
+        for s in candidates:
+            if s in self._snaps and self.verify(s):
+                return self._snaps[s], s
+        raise SnapshotIntegrityError(
+            f"snapshot digest mismatch at step {step}"
+            + (" (no older verifiable snapshot)" if fallback else ""),
+            step=step)
 
 
 class CheckpointManager:
@@ -125,10 +174,14 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------- save ---
     def save(self, state, step: int, blocking: bool = False):
-        """Snapshot to host memory now; write files asynchronously."""
+        """Snapshot to host memory now; write files asynchronously. A
+        prior async save that FAILED (disk full, permission lost) raises
+        here — a failed write must never be silently absorbed while the
+        caller keeps training past it."""
         self.wait()                                # one in-flight save max
         host_leaves = [np.asarray(x) for x in jax.tree.leaves(state)]
         paths = _leaf_paths(state)
@@ -162,13 +215,21 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # noqa: BLE001 — surfaced at
+                    self._error = e         # the next wait()/save()
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = sorted(self.steps())
@@ -180,28 +241,71 @@ class CheckpointManager:
         return sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
             "step_*") if p.is_dir() and not p.name.endswith(".tmp"))
 
+    def verify(self, step: int) -> bool:
+        """Integrity-check one on-disk snapshot without building a tree:
+        readable manifest, every leaf file present, every crc32 matching.
+        False on ANY torn/partial/corrupt state."""
+        d = self.dir / f"step_{step:08d}"
+        try:
+            with open(d / "manifest.json") as f:
+                manifest = json.load(f)
+            for meta in manifest["leaves"]:
+                raw = np.load(d / meta["file"])
+                if zlib.crc32(raw.tobytes()) != meta["crc32"]:
+                    return False
+        except Exception:       # noqa: BLE001 — unreadable IS unverifiable
+            return False
+        return True
+
+    def _load_step(self, like, step: int):
+        d = self.dir / f"step_{step:08d}"
+        try:
+            with open(d / "manifest.json") as f:
+                manifest = json.load(f)
+            by_path = {l["path"]: l for l in manifest["leaves"]}
+            leaves = []
+            for p in _leaf_paths(like):
+                meta = by_path[p]
+                raw = np.load(d / meta["file"])
+                if zlib.crc32(raw.tobytes()) != meta["crc32"]:
+                    raise SnapshotIntegrityError(
+                        f"checksum mismatch for {p} in step {step}",
+                        step=step)
+                leaves.append(_decode(raw, meta["dtype"]))
+        except SnapshotIntegrityError:
+            raise
+        except Exception as e:  # torn write: missing/truncated/unparseable
+            raise SnapshotIntegrityError(
+                f"unreadable snapshot at step {step}: {e!r}",
+                step=step) from e
+        return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
     def restore(self, like, step: Optional[int] = None,
-                shardings=None) -> Any:
+                shardings=None, fallback: bool = False) -> Any:
         """Load into the structure of ``like``; optionally re-shard onto a
-        (possibly different) mesh — the elastic-restart path."""
+        (possibly different) mesh — the elastic-restart path. A corrupt or
+        partially-written snapshot raises :class:`SnapshotIntegrityError`;
+        with ``fallback=True`` the restore walks back to the newest OLDER
+        snapshot that verifies instead (the returned step tells the caller
+        how far back it landed)."""
         steps = self.steps()
         if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         step = steps[-1] if step is None else step
-        d = self.dir / f"step_{step:08d}"
-        with open(d / "manifest.json") as f:
-            manifest = json.load(f)
-        by_path = {l["path"]: l for l in manifest["leaves"]}
-        paths = _leaf_paths(like)
-        leaves = []
-        for p in paths:
-            meta = by_path[p]
-            raw = np.load(d / meta["file"])
-            if zlib.crc32(raw.tobytes()) != meta["crc32"]:
-                raise IOError(f"checksum mismatch for {p} in step {step}")
-            leaves.append(_decode(raw, meta["dtype"]))
-        tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
+        candidates = [step] + ([s for s in sorted(steps, reverse=True)
+                                if s < step] if fallback else [])
+        tree, landed, err = None, None, None
+        for s in candidates:
+            try:
+                tree, landed = self._load_step(like, s), s
+                break
+            except SnapshotIntegrityError as e:
+                err = err or e
+        if tree is None:
+            raise err or SnapshotIntegrityError(
+                f"no verifiable snapshot at or below step {step}",
+                step=step)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda a, s: jax.device_put(a, s), tree, shardings)
-        return tree, step
+        return tree, landed

@@ -138,6 +138,11 @@ class ClientPolicy:
       ``done(k, state, shell)`` — client *k* dispatched its last window and
           its final drain was delivered; its device slot is free (the
           admission point for the next queued job).
+      ``crashed(k, exc)`` -> True to ABSORB an exception raised while
+          driving client *k* (its dispatch/advance/flush): the client is
+          cancelled (in-flight windows discarded) and the pass continues —
+          the farm's requeue path for a crashing board. False (default)
+          re-raises: one board's crash kills the lockstep pass.
     """
 
     def admit(self, round_idx: int):
@@ -148,6 +153,9 @@ class ClientPolicy:
 
     def done(self, k: int, state, shell):
         pass
+
+    def crashed(self, k: int, exc: BaseException) -> bool:
+        return False
 
 
 def plan_windows(steps: int, interval: int, start: int = 0) -> List[WindowPlan]:
@@ -324,18 +332,20 @@ class WindowScheduler:
                on_drain: Optional[Callable] = None,
                on_dispatch: Optional[Callable] = None,
                place_fn: Optional[Callable] = None,
-               on_commit: Optional[Callable] = None) -> "ClientDriver":
+               on_commit: Optional[Callable] = None,
+               inject: Optional[Callable] = None) -> "ClientDriver":
         """A thread-confinable per-client pipeline over this scheduler's
         window/overlap settings (see :class:`ClientDriver`)."""
         return ClientDriver(self, client, key=key, on_drain=on_drain,
                             on_dispatch=on_dispatch, place_fn=place_fn,
-                            on_commit=on_commit)
+                            on_commit=on_commit, inject=inject)
 
     def run_many(self, clients, on_drain: Optional[Callable] = None, *,
                  on_dispatch: Optional[Callable] = None,
                  place_fn: Optional[Callable] = None,
                  policy: Optional[ClientPolicy] = None,
-                 on_commit: Optional[Callable] = None):
+                 on_commit: Optional[Callable] = None,
+                 inject: Optional[Callable] = None):
         """ZP-Farm pass: ``clients`` is a list of ``(engine, windows,
         state, shell)`` tuples or :class:`Client`\\ s (per-client drain /
         stack / reset / barriers). Window *w* of EVERY client is dispatched
@@ -360,12 +370,25 @@ class WindowScheduler:
         dynamic admission / eviction / slot-free notification;
         ``on_commit(client_idx, plan, state, shell)`` fires after a
         client's barrier actions committed a window boundary (the farm's
-        snapshot hook). Returns the list of final ``(state, shell)`` per
-        client index (admitted clients included, in admission order)."""
+        snapshot hook); ``inject(client_idx, point, plan)`` is the fault-
+        injection hook threaded into every driver (see
+        :class:`ClientDriver`). A driver raising while driven is offered
+        to ``policy.crashed(k, exc)`` — absorbed crashes cancel the client
+        and the pass continues. Returns the list of final ``(state,
+        shell)`` per client index (admitted clients included, in admission
+        order)."""
         def make(c):
             return self.driver(c, key=len(drivers), on_drain=on_drain,
                                on_dispatch=on_dispatch, place_fn=place_fn,
-                               on_commit=on_commit)
+                               on_commit=on_commit, inject=inject)
+
+        def absorb(d, exc):
+            # a crashing board: discard its in-flight windows and let the
+            # policy requeue it, instead of one crash killing the pass
+            if policy is not None and policy.crashed(d.key, exc):
+                d.cancel()
+                return True
+            return False
 
         drivers: List[ClientDriver] = []
         for c in clients:
@@ -385,16 +408,31 @@ class WindowScheduler:
                 if policy is not None and policy.evict(k):
                     d.cancel()              # discard, never deliver
                     continue
-                if d.dispatch() is None:
+                try:
+                    plan = d.dispatch()
+                except Exception as e:      # noqa: BLE001 — policy decides
+                    if absorb(d, e):
+                        continue
+                    raise
+                if plan is None:
                     finished.append(d)
                 else:
                     progressed.append(d)
             for d in finished:          # after every live client dispatched
-                d.flush()
+                try:
+                    d.flush()
+                except Exception as e:      # noqa: BLE001 — policy decides
+                    if absorb(d, e):
+                        continue
+                    raise
                 if policy is not None:
                     policy.done(d.key, d.state, d.shell)
             for d in progressed:
-                d.advance()
+                try:
+                    d.advance()
+                except Exception as e:      # noqa: BLE001 — policy decides
+                    if not absorb(d, e):
+                        raise
             rnd += 1
         for d in drivers:
             d.flush()
@@ -465,13 +503,22 @@ class ClientDriver:
     Resume: the client's ``start_step``/``start_index`` seed the window
     cursor, so a driver over the TAIL of a window stream emits plans with
     the same global ids an uninterrupted run would.
+
+    Fault injection: ``inject(key, point, plan)`` (optional, ``None`` in
+    production) fires at the driver's three named points — ``"dispatch"``
+    right before the engine call, ``"drain"`` as ``advance()`` starts
+    retiring a window, ``"commit"`` right before a crossed barrier's
+    actions run. A raising hook models the board failing exactly there; a
+    sleeping hook models a hang. The chaos harness
+    (``repro.farm.chaos``) drives these from a seeded schedule.
     """
 
     def __init__(self, sched: "WindowScheduler", client, *, key=None,
                  on_drain: Optional[Callable] = None,
                  on_dispatch: Optional[Callable] = None,
                  place_fn: Optional[Callable] = None,
-                 on_commit: Optional[Callable] = None):
+                 on_commit: Optional[Callable] = None,
+                 inject: Optional[Callable] = None):
         self.sched = sched
         self.c = sched._normalize_client(client)
         self.key = key
@@ -479,6 +526,7 @@ class ClientDriver:
         self.on_dispatch = on_dispatch
         self.place_fn = place_fn
         self.on_commit = on_commit
+        self.inject = inject
         self._it = iter(self.c.windows)
         self.state = self.c.state
         self.shell = self.c.shell
@@ -504,6 +552,8 @@ class ClientDriver:
             stack = self.place_fn(self.key, stack)
         plan = WindowPlan(index=self.index, start=self.step,
                           size=len(items))
+        if self.inject is not None:
+            self.inject(self.key, "dispatch", plan)
         self.state, snap, ys = c.engine(self.state, self.shell, stack)
         if self.sched.overlap:
             self.shell = c.reset(snap) if c.reset else snap
@@ -519,6 +569,8 @@ class ClientDriver:
         if cur is None:
             return
         plan = cur[0]
+        if self.inject is not None:
+            self.inject(self.key, "drain", plan)
         if self.sched.overlap:
             self.flush()                # previous window's deferred drain
             self.pending = cur
@@ -535,6 +587,8 @@ class ClientDriver:
                 # drained and accepted before the action (forfeits ONE
                 # window's drain/compute overlap)
                 self.flush()
+                if not committed and self.inject is not None:
+                    self.inject(self.key, "commit", plan)
                 b.action(self.state, plan.boundary)
                 committed = True
         if committed and self.on_commit is not None:

@@ -2,9 +2,11 @@
 
 The FireSim-manager analog for this repo: a job queue + device placement +
 per-device watchdogs + straggler eviction over one
-``WindowScheduler.run_many`` pass."""
+``WindowScheduler.run_many`` pass, plus the ZP-Chaos hardening layer —
+:class:`FailurePolicy` (retry budgets, quarantine, slot circuit breakers)
+and the deterministic fault-injection harness (``repro.farm.chaos``)."""
 from repro.farm.manager import (  # noqa: F401
-    FarmError, FarmJob, FarmManager, JobSnapshot)
+    FailurePolicy, FarmError, FarmJob, FarmManager, JobSnapshot)
 from repro.farm.placement import (  # noqa: F401
-    DeviceSlot, enumerate_slots, place, place_stack)
+    DeviceSlot, enumerate_slots, pick_slot, place, place_stack)
 from repro.farm.telemetry import FarmTelemetry  # noqa: F401

@@ -67,6 +67,39 @@ Donating engines are requeue-safe: admission dispatches from fresh copies
 of ``FarmJob.state``/``shell`` (or from zero-arg factories), and snapshots
 are host copies — a donated-and-deleted device buffer is never a replay
 source.
+
+Failure-policy layer (``FarmManager(policy=FailurePolicy(...))`` — the
+ZP-Chaos hardening; ``policy=None`` keeps the legacy semantics exactly):
+
+  * retry budgets + backoff — a failed attempt re-enters the queue only
+    after an exponential backoff (``not_before``), so a crashing board
+    cannot hot-loop through the farm's admission machinery;
+  * quarantine / dead-letter — a job that exhausts its budget is
+    QUARANTINED, not raised: the farm completes every other job and the
+    report carries the dead-lettered ones (a poisoned job must never take
+    down a week-long campaign);
+  * slot circuit breaker — per-slot health scoring over the last
+    ``breaker_window`` runs; a slot failing ``breaker_threshold`` of them
+    is BENCHED (excluded from placement), then probed with a canary
+    dispatch and only re-admitted after the canary passes — a flapping
+    slot stops winning placement just because it frees fastest;
+  * snapshot integrity fallback — a requeue whose snapshot fails its
+    content digest (torn write, corruption) restores the newest OLDER
+    verifiable snapshot instead, or falls all the way back to window-0
+    replay, with the fallback logged in telemetry; delivered-prefix
+    bookkeeping is rewound with the cursor so exactly-once delivery
+    still holds;
+  * graceful shutdown — ``request_shutdown()`` stops admission, cuts
+    every running job at its next drain boundary (committed prefixes and
+    published snapshots are kept), marks the cut jobs ``interrupted``,
+    and lets ``run()`` return with the report intact (the SIGINT path in
+    ``launch.farm``).
+
+Deterministic fault injection (``repro.farm.chaos``) threads through the
+named points ``slot.dispatch`` / ``slot.drain`` / ``slot.commit`` (via
+``ClientDriver``'s inject hook), ``worker.loop`` / ``slot.canary`` /
+``results.post`` (the slot worker), and ``snapshot.publish`` — every
+fault the policy layer absorbs is reproducible from a seed.
 """
 from __future__ import annotations
 
@@ -82,17 +115,70 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.manager import MemorySnapshotStore
+from repro.checkpoint.manager import (MemorySnapshotStore,
+                                      SnapshotIntegrityError)
 from repro.core.schedule import (Client, ClientPolicy, DrainBarrier,
                                  WindowScheduler)
 from repro.core.watchdog import Watchdog
-from repro.farm.placement import (DeviceSlot, enumerate_slots, place,
-                                  place_stack)
+from repro.farm.placement import (DeviceSlot, enumerate_slots, pick_slot,
+                                  place, place_stack)
 from repro.farm.telemetry import FarmTelemetry
 
 
 class FarmError(RuntimeError):
     pass
+
+
+def _default_canary(slot: DeviceSlot):
+    """The stock circuit-breaker probe: one tiny round-trip through the
+    slot's device — placement, compute, fetch — raising if the seat
+    cannot even do that. Jobs only re-land on a benched slot after this
+    (or ``FailurePolicy.canary``) passes."""
+    x = jax.device_put(jnp.arange(8, dtype=jnp.float32), slot.device)
+    y = jax.block_until_ready(jnp.sum(x * 2.0))
+    if float(y) != 56.0:
+        raise FarmError(f"canary miscomputed on {slot.name}: {y}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePolicy:
+    """The farm's failure-handling contract (pass to ``FarmManager``;
+    ``None`` keeps the legacy raise-on-failure semantics).
+
+    ``max_retries``  — per-job retry budget override (``None`` = each
+        job's own ``max_requeues``).
+    ``backoff_base_s`` / ``backoff_factor`` / ``backoff_max_s`` —
+        exponential backoff before a failed attempt re-enters admission:
+        retry *n* waits ``min(base * factor**(n-1), max)`` seconds
+        (``base=0`` disables the wait).
+    ``quarantine``   — dead-letter jobs that exhaust their budget instead
+        of failing the farm: the run completes, the report carries them.
+    ``breaker_window`` / ``breaker_threshold`` — a slot accumulating
+        ``threshold`` failed runs within its last ``window`` runs trips
+        its circuit breaker and is benched.
+    ``breaker_cooldown_s`` — wait before probing a benched slot.
+    ``breaker_max_probes`` — consecutive canary failures after which a
+        benched slot is written off entirely (leaves the pool).
+    ``canary``       — ``fn(slot)`` probe dispatched to a benched slot;
+        raising = still broken. ``None`` = :func:`_default_canary`.
+    """
+    max_retries: Optional[int] = None
+    backoff_base_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 5.0
+    quarantine: bool = True
+    breaker_window: int = 6
+    breaker_threshold: int = 3
+    breaker_cooldown_s: float = 0.0
+    breaker_max_probes: int = 50
+    canary: Optional[Callable[[DeviceSlot], None]] = None
+
+    def backoff_for(self, attempt: int) -> float:
+        if self.backoff_base_s <= 0:
+            return 0.0
+        return min(self.backoff_max_s,
+                   self.backoff_base_s
+                   * self.backoff_factor ** max(0, attempt - 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +246,8 @@ class FarmJob:
     snapshot: Optional[JobSnapshot] = dataclasses.field(
         default=None, init=False)       # last accepted commit's cursor
     windows_replayed: int = dataclasses.field(default=0, init=False)
+    not_before: float = dataclasses.field(default=0.0, init=False)
+    # ^ backoff gate: a requeued job is not re-admitted before this time
     committed_outputs: List = dataclasses.field(
         default_factory=list, init=False)   # delivered prefix [0, cursor)
     _snap_like: Any = dataclasses.field(default=None, init=False)
@@ -198,6 +286,12 @@ class _Run:
 _STOP = object()
 
 
+@dataclasses.dataclass(frozen=True)
+class _Canary:
+    """Circuit-breaker probe task for one benched slot's worker thread."""
+    slot: DeviceSlot
+
+
 class _SlotWorker(threading.Thread):
     """One device slot's dispatcher thread: pulls job assignments off a
     bounded work queue and drives each through a thread-confined
@@ -218,7 +312,29 @@ class _SlotWorker(threading.Thread):
             task = self.inbox.get()
             if task is _STOP:
                 return
+            if isinstance(task, _Canary):
+                self._canary()
+                continue
+            # worker.loop: an injected raise here kills the THREAD itself
+            # (no crash message ever posts) — the liveness watchdog is the
+            # only thing that can notice, exactly the failure it exists for
+            self.mgr._inject("worker.loop", slot=self.slot.name,
+                             job=task.job.name)
             self._drive(task)
+
+    def _canary(self):
+        """Run the breaker probe on the slot's own thread (the same thread
+        confinement real jobs get) and post the verdict."""
+        mgr = self.mgr
+        mgr.wd.heartbeat(self.slot.name, gap=False)
+        try:
+            mgr._inject("slot.canary", slot=self.slot.name)
+            fn = ((mgr.policy.canary if mgr.policy else None)
+                  or _default_canary)
+            fn(self.slot)
+            mgr._results.put(("canary", self.slot.name, True, None))
+        except BaseException as e:  # noqa: BLE001 — verdict, not crash
+            mgr._results.put(("canary", self.slot.name, False, e))
 
     # ------------------------------------------------------------ driving --
     def _drive(self, run: _Run):
@@ -261,6 +377,9 @@ class _SlotWorker(threading.Thread):
                     run.fault = e
             mgr.telemetry.drain(self.slot.name, mgr._key(run, plan),
                                 wall_s=mgr.clock() - t0)
+            # results.post: an injected stall here models a results-queue
+            # hand-off delay — the control plane simply sees the drain late
+            mgr._inject("results.post", job=job.name, slot=self.slot.name)
             mgr._results.put(("drain", run, plan, records, ys))
 
         def on_commit(k, plan, state, shell):
@@ -272,12 +391,18 @@ class _SlotWorker(threading.Thread):
                 return
             mgr._publish_snapshot(run, plan, state, shell)
 
+        inject = None
+        if mgr.injector is not None:
+            def inject(k, point, plan):
+                mgr._inject("slot." + point, job=job.name,
+                            slot=self.slot.name, window=plan.index)
         try:
             client = mgr._client_for(run, self.slot)
             driver = mgr.sched.driver(
                 client, key=run.idx, on_drain=on_drain,
                 on_dispatch=on_dispatch, on_commit=on_commit,
-                place_fn=lambda k, stack: place_stack(stack, self.slot))
+                place_fn=lambda k, stack: place_stack(stack, self.slot),
+                inject=inject)
             while True:
                 t0 = mgr.clock()
                 plan = driver.dispatch()
@@ -332,6 +457,7 @@ class FarmManager(ClientPolicy):
                  mode: str = "lockstep",
                  slot_queue_depth: int = 1,
                  poll_s: float = 0.02,
+                 policy: Optional[FailurePolicy] = None,
                  clock: Callable[[], float] = time.perf_counter):
         if mode not in ("lockstep", "async"):
             raise ValueError(f"unknown farm mode: {mode!r}")
@@ -347,7 +473,9 @@ class FarmManager(ClientPolicy):
         self.mode = mode
         self.slot_queue_depth = max(1, slot_queue_depth)
         self.poll_s = poll_s
+        self.policy = policy
         self.clock = clock
+        self.injector = None        # chaos harness hook (repro.farm.chaos)
 
         self.queue: deque = deque()
         self.jobs: List[FarmJob] = []
@@ -366,6 +494,12 @@ class FarmManager(ClientPolicy):
         self._workers: Dict[str, _SlotWorker] = {}
         self._slot_load: Dict[str, int] = {}    # assigned-not-finished runs
         self._lost: set = set()                 # abandoned (hung) slots
+        # ----- failure-policy state -----
+        self._health: Dict[str, deque] = {}     # slot -> recent run bools
+        self._benched: Dict[str, float] = {}    # slot -> benched-at time
+        self._probing: set = set()              # slots with a canary out
+        self._canary_fails: Dict[str, int] = {}  # consecutive probe fails
+        self._shutdown = threading.Event()
 
     # ------------------------------------------------------------- intake --
     def submit(self, job: FarmJob) -> FarmJob:
@@ -377,6 +511,74 @@ class FarmManager(ClientPolicy):
         """Mark a job for eviction at its next drain boundary (the
         deterministic test/CLI path — the watchdog path is wall-time)."""
         self._force.add(job_name)
+
+    def request_shutdown(self):
+        """Graceful stop (the SIGINT path): no new admissions, every
+        running job is cut at its NEXT drain boundary keeping its
+        committed prefix and published snapshots, queued + cut jobs are
+        marked ``interrupted``, and ``run()`` returns with the report.
+        Safe to call from a signal handler or another thread."""
+        self._shutdown.set()
+
+    @property
+    def interrupted(self) -> bool:
+        return self._shutdown.is_set()
+
+    def _inject(self, point: str, **ctx):
+        """Named fault-injection point (no-op without a chaos injector —
+        the production fast path is one attribute check)."""
+        if self.injector is not None:
+            self.injector.fire(point, **ctx)
+
+    # -------------------------------------------- slot health / breaker --
+    def _budget(self, job: FarmJob) -> int:
+        if self.policy is not None and self.policy.max_retries is not None:
+            return self.policy.max_retries
+        return job.max_requeues
+
+    def _slot_result(self, slot_name: str, ok: bool, why: str = ""):
+        """Score one finished run on a slot; trip the breaker when the
+        failure count inside the scoring window crosses the threshold."""
+        p = self.policy
+        if p is None or slot_name in self._lost:
+            return
+        h = self._health.setdefault(
+            slot_name, deque(maxlen=max(1, p.breaker_window)))
+        h.append(ok)
+        if ok or slot_name in self._benched:
+            return
+        fails = sum(1 for r in h if not r)
+        if fails >= p.breaker_threshold:
+            self._benched[slot_name] = self.clock()
+            self.telemetry.breaker(slot_name, "trip",
+                                   f"{fails}/{len(h)} failed: {why}")
+
+    def _unavailable(self) -> set:
+        """Slots placement must skip: lost, benched, or out on a probe."""
+        return self._lost | set(self._benched) | self._probing
+
+    def _canary_verdict(self, slot_name: str, ok: bool, err):
+        self._probing.discard(slot_name)
+        if ok:
+            self._benched.pop(slot_name, None)
+            self._health.get(slot_name, deque()).clear()
+            self._canary_fails[slot_name] = 0
+            self.telemetry.breaker(slot_name, "canary_pass")
+            self.telemetry.breaker(slot_name, "readmit")
+            return
+        self._benched[slot_name] = self.clock()     # re-arm the cooldown
+        n = self._canary_fails.get(slot_name, 0) + 1
+        self._canary_fails[slot_name] = n
+        self.telemetry.breaker(slot_name, "canary_fail", repr(err))
+        p = self.policy
+        if p is not None and n >= p.breaker_max_probes:
+            # a seat that cannot pass its own canary is not coming back:
+            # write it off so the farm fails loudly instead of probing
+            # forever with jobs stuck behind it
+            self._benched.pop(slot_name, None)
+            self._lost.add(slot_name)
+            self.telemetry.breaker(slot_name, "written_off",
+                                   f"{n} consecutive canary failures")
 
     # ------------------------------------------------------------ running --
     def run(self, strict: bool = True) -> dict:
@@ -399,11 +601,18 @@ class FarmManager(ClientPolicy):
             self.sched.run_many([], on_drain=self._on_drain,
                                 on_dispatch=self._on_dispatch,
                                 place_fn=self._place, policy=self,
-                                on_commit=self._on_commit)
+                                on_commit=self._on_commit,
+                                inject=(self._inject_lockstep
+                                        if self.injector else None))
+            if self._shutdown.is_set():
+                self._drain_interrupted()
         report = self.report()
         if strict:
+            # quarantined jobs are the dead-letter REPORT, interrupted
+            # ones a requested stop — neither is a farm failure
             failed = [n for n, j in report["jobs"].items()
-                      if j["status"] != "done"]
+                      if j["status"] not in ("done", "quarantined",
+                                             "interrupted")]
             if failed:
                 raise FarmError(f"farm jobs failed verification: {failed}")
         return report
@@ -419,6 +628,9 @@ class FarmManager(ClientPolicy):
                                                     if j.snapshot else 0),
                               "windows_replayed": j.windows_replayed,
                               "error": j.error} for j in self.jobs},
+            "quarantined": [j.name for j in self.jobs
+                            if j.status == "quarantined"],
+            "interrupted": self._shutdown.is_set(),
             "telemetry": self.telemetry.report(),
         }
 
@@ -433,6 +645,8 @@ class FarmManager(ClientPolicy):
         try:
             self._assign_async()
             while self._running or self.queue:
+                if self._shutdown.is_set():
+                    self._shutdown_async()
                 try:
                     msg = self._results.get(timeout=self.poll_s)
                 except queue_mod.Empty:
@@ -440,6 +654,7 @@ class FarmManager(ClientPolicy):
                 if msg is not None:
                     self._handle_async(msg)
                 self._sweep_async()
+                self._probe_async()
                 self._assign_async()
         finally:
             for w in self._workers.values():
@@ -453,13 +668,19 @@ class FarmManager(ClientPolicy):
 
     def _assign_async(self):
         """Admission: feed queued jobs into slot work queues, honoring the
-        requeue avoid-slot preference, with the same progress guarantee as
-        lockstep admit (the preference yields when nothing else can ever
-        free a different slot)."""
+        requeue avoid-slot preference and each job's backoff gate, with
+        the same progress guarantee as lockstep admit (the preference
+        yields when nothing else can ever free a different slot)."""
         assigned = 0
         deferred = []
+        backing_off = False
+        now = self.clock()
         while self.queue:
             job = self.queue.popleft()
+            if job.not_before > now:    # backoff: re-admission must wait
+                deferred.append(job)
+                backing_off = True
+                continue
             slot = self._pick_async_slot(self._avoid.get(job.name))
             if slot is None:            # only its old slot has capacity:
                 deferred.append(job)    # wait for a DIFFERENT one
@@ -468,36 +689,68 @@ class FarmManager(ClientPolicy):
             self._dispatch_to_slot(job, slot)
             assigned += 1
         self.queue.extendleft(reversed(deferred))
-        if not assigned and not self._running and self.queue:
+        if not assigned and not self._running and self.queue \
+                and not backing_off:
             # nothing running, nothing assigned: no other slot will ever
             # free, so the avoid preference must yield (progress guarantee)
-            job = self.queue.popleft()
-            self._avoid.pop(job.name, None)
             slot = self._pick_async_slot(None)
-            if slot is None:
+            if slot is not None:
+                job = self.queue.popleft()
+                self._avoid.pop(job.name, None)
+                self._dispatch_to_slot(job, slot)
+                assigned += 1
+            elif not (set(self._benched) | self._probing):
+                # no capacity anywhere and no benched slot a canary could
+                # still heal: the farm is genuinely out of seats
                 raise FarmError(
                     "no live slots left to place queued jobs "
                     f"(lost: {sorted(self._lost)})")
-            self._dispatch_to_slot(job, slot)
-            assigned += 1
         if assigned:
             self.telemetry.occupancy(len(self._running), len(self.slots))
 
     def _pick_async_slot(self, avoid: Optional[str]) -> Optional[DeviceSlot]:
         # least-loaded first: with slot_queue_depth >= 2 a fixed slot
         # order would double-book early slots while later ones sit idle
+        out = self._unavailable()
         candidates = sorted(
             (s for s in self.slots
-             if s.name not in self._lost
+             if s.name not in out
              and self._slot_load[s.name] < self.slot_queue_depth),
             key=lambda s: (self._slot_load[s.name], s.index))
-        live = [s for s in self.slots if s.name not in self._lost]
-        for s in candidates:
-            if s.name != avoid:
-                return s
-        if len(live) == 1 and candidates:
-            return candidates[0]        # single-slot farm: no alternative
-        return None
+        live = [s for s in self.slots if s.name not in out]
+        return pick_slot(candidates, avoid=avoid,
+                         sole_candidate=len(live) == 1)
+
+    def _probe_async(self):
+        """Dispatch a canary to every benched slot whose cooldown has
+        elapsed (one probe in flight per slot)."""
+        if self.policy is None or not self._benched:
+            return
+        now = self.clock()
+        for name, t0 in list(self._benched.items()):
+            if name in self._probing or name in self._lost:
+                continue
+            if now - t0 < self.policy.breaker_cooldown_s:
+                continue
+            try:
+                self._workers[name].inbox.put_nowait(
+                    _Canary(next(s for s in self.slots if s.name == name)))
+            except queue_mod.Full:
+                continue                # pre-bench backlog: retry next tick
+            self._probing.add(name)
+            self.telemetry.breaker(name, "probe")
+
+    def _shutdown_async(self):
+        """Graceful-stop sweep: orphan the queue, cut every running job at
+        its next drain boundary (its committed prefix stays delivered)."""
+        while self.queue:
+            job = self.queue.popleft()
+            if job.status != "done":
+                job.status = "interrupted"
+        for run in self._running.values():
+            if not run.evict_flag.is_set():
+                run.evict_why = "shutdown"
+                run.evict_flag.set()
 
     def _dispatch_to_slot(self, job: FarmJob, slot: DeviceSlot):
         job.attempts += 1
@@ -513,6 +766,10 @@ class FarmManager(ClientPolicy):
         self._workers[slot.name].inbox.put(run)
 
     def _handle_async(self, msg):
+        if msg[0] == "canary":
+            _, slot_name, ok, err = msg
+            self._canary_verdict(slot_name, ok, err)
+            return
         kind, run = msg[0], msg[1]
         if run.closed:                  # stale message from an abandoned
             return                      # thread: the run is already gone
@@ -524,12 +781,20 @@ class FarmManager(ClientPolicy):
         self._running.pop(run.idx, None)
         self._slot_load[run.slot.name] -= 1
         if kind == "done":
+            self._slot_result(run.slot.name, ok=run.fault is None)
             self._finish_run(run, msg[2], msg[3])
         elif kind == "fault":
+            self._slot_result(run.slot.name, ok=False,
+                              why=f"veto: {run.fault}")
             self._requeue_or_fail(run, f"drain veto: {run.fault}")
         elif kind == "evicted":
-            self._requeue_or_fail(run, run.evict_why or "evicted")
+            if run.evict_why == "shutdown":
+                self._retire_interrupted(run)
+            else:
+                self._requeue_or_fail(run, run.evict_why or "evicted")
         else:  # crash: a slot-thread exception is a board fault, not a
+            self._slot_result(run.slot.name, ok=False,
+                              why=f"crash: {msg[2]!r}")
             self._requeue_or_fail(run, f"slot thread crash: {msg[2]!r}")
         self.telemetry.occupancy(len(self._running), len(self.slots))
 
@@ -557,7 +822,7 @@ class FarmManager(ClientPolicy):
             if run.evict_flag.is_set():
                 continue                # already signalled
             if (run.fault is None
-                    and run.job.requeues >= run.job.max_requeues):
+                    and run.job.requeues >= self._budget(run.job)):
                 continue                # budget spent: let it limp home
             run.evict_why = why
             run.evict_flag.set()
@@ -610,6 +875,7 @@ class FarmManager(ClientPolicy):
         save, so it survives donation and slot loss; the cursor handle on
         the run is what the control plane reads at requeue time."""
         job = run.job
+        self._inject("snapshot.publish", job=job.name, slot=run.slot.name)
         vsnap = (job.verify.snapshot()
                  if hasattr(job.verify, "snapshot") else {})
         tree = {"state": state, "shell": shell, "verify": vsnap,
@@ -623,6 +889,47 @@ class FarmManager(ClientPolicy):
         run.snapshot = JobSnapshot(step=plan.boundary,
                                    window=plan.index + 1)
 
+    def _restore_snapshot(self, job: FarmJob, slot: DeviceSlot,
+                          snap: JobSnapshot):
+        """Integrity-checked snapshot restore for a requeue. A corrupt or
+        partially-written snapshot falls back to the newest OLDER
+        verifiable one — the delivered-prefix and replay bookkeeping are
+        rewound with the cursor so exactly-once delivery still holds; no
+        verifiable snapshot at all rewinds the job to a window-0 replay.
+        Every fallback is logged in telemetry. Returns ``(tree, snap)``
+        (``(None, None)`` = window-0)."""
+        want = snap.step
+        try:
+            try:
+                job.snapshot_store.wait()   # surfaces async save errors
+            except Exception as e:          # noqa: BLE001 — a FAILED
+                # publish: the store still holds the saves that landed;
+                # restore below falls back to the newest of those
+                self.telemetry.fault("snapshot.publish", "save_error",
+                                     job=job.name, slot=slot.name,
+                                     event="error")
+            tree, got = job.snapshot_store.restore(
+                job._snap_like, step=want, fallback=True)
+        except Exception as e:  # noqa: BLE001 — nothing verifiable left
+            self.telemetry.fallback(slot.name, job.name, want, None,
+                                    repr(e))
+            job.windows_replayed += snap.window
+            job.committed_outputs = []      # windows re-run AND re-deliver
+            job.snapshot = None
+            return None, None
+        if got != want:
+            # landed on an older snapshot: rewind the cursor to ITS
+            # recorded position and drop the committed prefix beyond it
+            new_window = int(np.asarray(
+                tree.get("cursor", {}).get("window", 0)))
+            self.telemetry.fallback(slot.name, job.name, want, got,
+                                    f"corrupt snapshot at step {want}")
+            job.windows_replayed += max(0, snap.window - new_window)
+            job.committed_outputs = job.committed_outputs[:new_window]
+            snap = JobSnapshot(step=got, window=new_window)
+            job.snapshot = snap
+        return tree, snap
+
     def _client_for(self, run: _Run, slot: DeviceSlot) -> Client:
         """Build the attempt's scheduler client: from the job's initial
         state (fresh copies — donation-safe) on a first attempt, or from
@@ -632,6 +939,9 @@ class FarmManager(ClientPolicy):
         exactly an uninterrupted run's."""
         job = run.job
         snap = job.snapshot
+        tree = None
+        if snap is not None:
+            tree, snap = self._restore_snapshot(job, slot, snap)
         if snap is None:
             state = place(job._initial("state"), slot)
             shell = place(job._initial("shell"), slot)
@@ -641,16 +951,14 @@ class FarmManager(ClientPolicy):
                     job._verify_init = job.verify.snapshot()
                 else:
                     # no-snapshot requeue (evicted before any accepted
-                    # barrier): the stream replays from window 0, so a
-                    # stateful verifier must rewind to its starting
-                    # position too — not stay advanced mid-stream
+                    # barrier, or every snapshot corrupt): the stream
+                    # replays from window 0, so a stateful verifier must
+                    # rewind to its starting position too — not stay
+                    # advanced mid-stream
                     job.verify.restore(job._verify_init)
             windows = job._window_iter()
             start_step = start_index = 0
         else:
-            job.snapshot_store.wait()
-            tree, _ = job.snapshot_store.restore(job._snap_like,
-                                                 step=snap.step)
             state = place(tree["state"], slot)
             shell = place(tree["shell"], slot)
             if hasattr(job.verify, "restore") and tree.get("verify"):
@@ -675,6 +983,15 @@ class FarmManager(ClientPolicy):
         if run is None or run.fault is not None:
             return
         self._publish_snapshot(run, plan, state, shell)
+
+    def _inject_lockstep(self, k: int, point: str, plan):
+        """Lockstep route for the ClientDriver injection points (the async
+        route is the slot worker's closure)."""
+        run = self._running.get(k)
+        if run is None:
+            return
+        self._inject("slot." + point, job=run.job.name,
+                     slot=run.slot.name, window=plan.index)
 
     def _gated_barriers(self, run: _Run):
         """Per-attempt barrier wrappers: a barrier action (e.g. a
@@ -707,24 +1024,63 @@ class FarmManager(ClientPolicy):
 
     # ----------------------------------------------- ClientPolicy protocol --
     def admit(self, round_idx: int):
+        if self._shutdown.is_set():
+            self._interrupt_lockstep()
+            return ()
         self._process_evictions()
+        if self._benched:
+            self._probe_lockstep()
         admissions = []
-        deferred = []
-        while self.queue and self._free:
-            job = self.queue.popleft()
-            slot = self._pick_slot(self._avoid.get(job.name))
-            if slot is None:        # only its old slot is free: wait for a
-                deferred.append(job)  # DIFFERENT one (requeue contract)
+        while True:
+            deferred = []
+            backing_off = False
+            now = self.clock()
+            while self.queue and self._free:
+                job = self.queue.popleft()
+                if job.not_before > now:    # backoff: re-admission waits
+                    deferred.append(job)
+                    backing_off = True
+                    continue
+                slot = self._pick_slot(self._avoid.get(job.name))
+                if slot is None:    # only its old slot is free: wait for
+                    deferred.append(job)    # a DIFFERENT one
+                    continue
+                self._avoid.pop(job.name, None)
+                admissions.append(self._admit_one(job, slot))
+            self.queue.extendleft(reversed(deferred))
+            if admissions or self._running or not self.queue:
+                break
+            # STALLED: jobs queued, nothing running, nothing admitted.
+            # Lockstep has no background tick — resolve the stall here or
+            # run_many's round loop would exit with jobs stranded.
+            if backing_off:
+                # wait out the earliest backoff gate, then re-admit
+                delay = min(j.not_before for j in self.queue) - self.clock()
+                if delay > 0:
+                    time.sleep(delay)
                 continue
-            self._avoid.pop(job.name, None)
-            admissions.append(self._admit_one(job, slot))
-        self.queue.extendleft(reversed(deferred))
-        if not admissions and not self._running and self.queue:
-            # nothing running, nothing admitted: no other slot will ever
-            # free, so the avoid preference must yield (progress guarantee)
-            job = self.queue.popleft()
-            self._avoid.pop(job.name, None)
-            admissions.append(self._admit_one(job, self._free.pop(0)))
+            slot = self._pick_slot(None)
+            if slot is not None:
+                # only the avoid preference blocks: no other slot will
+                # ever free, so it must yield (progress guarantee)
+                job = self.queue.popleft()
+                self._avoid.pop(job.name, None)
+                admissions.append(self._admit_one(job, slot))
+                break
+            if self._benched:
+                # every placeable seat is benched: probe inline until one
+                # heals or the breaker writes them all off
+                self._probe_lockstep()
+                if self._benched and self.policy is not None:
+                    delay = (min(self._benched.values())
+                             + self.policy.breaker_cooldown_s
+                             - self.clock())
+                    if delay > 0:
+                        time.sleep(delay)
+                continue
+            raise FarmError(
+                "no live slots left to place queued jobs "
+                f"(lost: {sorted(self._lost)})")
         if self._running:
             self.telemetry.occupancy(len(self._running), len(self.slots))
         return admissions
@@ -736,9 +1092,26 @@ class FarmManager(ClientPolicy):
         run = self._running.pop(k)
         self._free.append(run.slot)
         if run.fault is not None:
+            self._slot_result(run.slot.name, ok=False,
+                              why=f"veto: {run.fault}")
             self._requeue_or_fail(run, f"drain veto: {run.fault}")
             return
+        self._slot_result(run.slot.name, ok=True)
         self._finish_run(run, state, shell)
+
+    def crashed(self, k: int, exc: BaseException) -> bool:
+        """Lockstep crash absorption (the ClientPolicy hook run_many
+        offers a raising driver to): a client crashing mid-drive is a
+        board fault, not a farm failure — free the seat, score the slot,
+        requeue or dead-letter the job, keep the pass alive. Mirrors the
+        async mode's slot-thread ``crash`` message."""
+        run = self._running.pop(k, None)
+        if run is None:
+            return False
+        self._free.append(run.slot)
+        self._slot_result(run.slot.name, ok=False, why=f"crash: {exc!r}")
+        self._requeue_or_fail(run, f"client crash: {exc!r}")
+        return True
 
     # -------------------------------------------------- scheduler callbacks --
     def _place(self, k: int, stack):
@@ -776,12 +1149,70 @@ class FarmManager(ClientPolicy):
         return (run.job.name, run.job.attempts, plan.index)
 
     def _pick_slot(self, avoid: Optional[str]) -> Optional[DeviceSlot]:
-        for i, s in enumerate(self._free):
-            if s.name != avoid:
-                return self._free.pop(i)
-        if len(self.slots) == 1 and self._free:
-            return self._free.pop(0)    # single-slot farm: no alternative
-        return None
+        out = self._unavailable()
+        candidates = [s for s in self._free if s.name not in out]
+        live = [s for s in self.slots if s.name not in out]
+        s = pick_slot(candidates, avoid=avoid,
+                      sole_candidate=len(live) == 1)
+        if s is not None:
+            self._free.remove(s)
+        return s
+
+    def _probe_lockstep(self):
+        """Inline breaker probe (lockstep has no slot threads): run the
+        canary on the control thread for each benched slot past its
+        cooldown, and apply the verdict immediately."""
+        if self.policy is None:
+            return
+        now = self.clock()
+        for name, t0 in list(self._benched.items()):
+            if name in self._lost \
+                    or now - t0 < self.policy.breaker_cooldown_s:
+                continue
+            slot = next(s for s in self.slots if s.name == name)
+            self.telemetry.breaker(name, "probe")
+            try:
+                self._inject("slot.canary", slot=name)
+                fn = self.policy.canary or _default_canary
+                fn(slot)
+            except BaseException as e:  # noqa: BLE001 — verdict, not crash
+                self._canary_verdict(name, False, e)
+            else:
+                self._canary_verdict(name, True, None)
+
+    def _interrupt_lockstep(self):
+        """Graceful-stop (lockstep): cut every running client at this
+        round boundary — run_many's evict check cancels it, its committed
+        prefix and snapshots stay — and orphan the queue."""
+        for k, run in list(self._running.items()):
+            self._evicted.add(k)
+            self._running.pop(k)
+            self._free.append(run.slot)
+            self._retire_interrupted(run)
+        while self.queue:
+            job = self.queue.popleft()
+            if job.status != "done":
+                job.status = "interrupted"
+
+    def _drain_interrupted(self):
+        """Post-run sweep for a shutdown that landed after the last admit
+        tick: everything still queued or running is interrupted."""
+        for k, run in list(self._running.items()):
+            self._running.pop(k)
+            self._free.append(run.slot)
+            self._retire_interrupted(run)
+        while self.queue:
+            job = self.queue.popleft()
+            if job.status != "done":
+                job.status = "interrupted"
+
+    def _retire_interrupted(self, run: _Run):
+        """A shutdown-cut attempt: adopt its committed progress (snapshot
+        + delivered prefix — a restarted farm resumes from there) and mark
+        the job ``interrupted`` instead of requeueing."""
+        self._adopt_progress(run)
+        self.wd.forget(run.slot.name)
+        run.job.status = "interrupted"
 
     def _admit_one(self, job: FarmJob, slot: DeviceSlot) -> Client:
         job.attempts += 1
@@ -812,32 +1243,42 @@ class FarmManager(ClientPolicy):
         for k, why in marks.items():
             run = self._running[k]
             if (run.fault is None
-                    and run.job.requeues >= run.job.max_requeues):
+                    and run.job.requeues >= self._budget(run.job)):
                 continue                # budget spent: let it limp home
             self._evicted.add(k)
             self._running.pop(k)
             self._free.append(run.slot)
+            if run.fault is not None:
+                self._slot_result(run.slot.name, ok=False,
+                                  why=f"veto: {run.fault}")
             self._requeue_or_fail(run, why)
 
-    def _requeue_or_fail(self, run: _Run, why: str):
-        """Shared evict/fault tail (boundary sweep AND the done()-path
-        fault on a job's final window): adopt the attempt's last accepted
-        snapshot as the job's resume point and retain the delivered
-        windows up to its cursor, clear the slot's duration history so its
-        next tenant is not judged against the evicted job's, drop any
-        stale force mark, then requeue or fail on budget."""
+    def _adopt_progress(self, run: _Run) -> int:
+        """Adopt a finished-badly attempt's last accepted snapshot as the
+        job's resume point and retain the delivered windows up to its
+        cursor. Returns the cursor window (0 = replay from the start).
+
+        A snapshot whose windows never reached the control plane — a
+        board hung between commit and hand-off — is NOT adopted: the job
+        resumes from its previous cursor, so the exactly-once delivered
+        prefix only ever grows from windows actually in hand."""
         job = run.job
         if (run.snapshot is not None and run.snapshot.window
                 - run.start_window <= len(run.outputs)):
-            # windows [start_window, snapshot.window) of this attempt are
-            # committed: they extend the exactly-once delivered prefix and
-            # will never re-run (a snapshot whose windows never reached the
-            # control plane — a board hung between commit and hand-off —
-            # is NOT adopted: the job resumes from its previous cursor)
             job.committed_outputs.extend(
                 run.outputs[:run.snapshot.window - run.start_window])
             job.snapshot = run.snapshot
-        cursor = job.snapshot.window if job.snapshot else 0
+        return job.snapshot.window if job.snapshot else 0
+
+    def _requeue_or_fail(self, run: _Run, why: str):
+        """Shared evict/fault tail (boundary sweep AND the done()-path
+        fault on a job's final window): adopt the attempt's committed
+        progress, clear the slot's duration history so its next tenant is
+        not judged against the evicted job's, drop any stale force mark,
+        then requeue (with the policy's backoff gate), quarantine, or fail
+        on budget."""
+        job = run.job
+        cursor = self._adopt_progress(run)
         # work lost to the eviction: drained-but-uncommitted windows that
         # the resumed attempt must re-run (0 when the evict landed on a
         # commit; the whole attempt under the legacy no-barrier replay)
@@ -848,11 +1289,22 @@ class FarmManager(ClientPolicy):
         self.telemetry.eviction(run.slot.name, job.name, why)
         if job.capture is not None:
             job.capture.reset(upto=cursor)  # committed rows stay
-        if job.requeues < job.max_requeues:
+        if job.requeues < self._budget(job):
             job.requeues += 1
+            backoff = (self.policy.backoff_for(job.requeues)
+                       if self.policy is not None else 0.0)
+            if backoff > 0:
+                job.not_before = self.clock() + backoff
+            self.telemetry.retry(job.name, job.requeues, backoff, why)
             job.status = "queued"
             self._avoid[job.name] = run.slot.name
             self.queue.appendleft(job)      # uncommitted outputs discarded
+        elif self.policy is not None and self.policy.quarantine:
+            # budget exhausted under a quarantine policy: dead-letter the
+            # job — the farm completes the rest and REPORTS it
+            job.status = "quarantined"
+            job.error = why
+            self.telemetry.quarantine(job.name, why)
         else:
             job.status = "failed"
             job.error = why

@@ -50,6 +50,21 @@ def enumerate_slots(min_slots: int = 1,
     return slots
 
 
+def pick_slot(candidates: Sequence[DeviceSlot], avoid: Optional[str] = None,
+              sole_candidate: bool = False) -> Optional[DeviceSlot]:
+    """Shared admission pick over an already-filtered (healthy, in-pool,
+    under-capacity) candidate list in preference order: the first slot
+    that is not the requeue's ``avoid`` seat wins. ``sole_candidate=True``
+    relaxes the avoid preference when the pool has only one live slot —
+    a single-seat farm has no different seat to wait for."""
+    for s in candidates:
+        if s.name != avoid:
+            return s
+    if sole_candidate and candidates:
+        return candidates[0]
+    return None
+
+
 def place(tree, slot: DeviceSlot):
     """Pin a job's state/shell pytree onto its slot's device (admission
     time; stays resident across windows)."""

@@ -22,14 +22,23 @@ rather than just measured):
       slowness);
   queue_depth — slot work-queue depth sampled at every assignment.
 
+Failure-policy channels (filled by the :class:`FailurePolicy` layer and
+the chaos harness): per-job retry counts with their backoff, quarantined
+(dead-lettered) jobs, circuit-breaker trips/probes per slot, snapshot
+integrity fallbacks, and a fault-recovery log pairing every injected
+fault with the recovery path that absorbed it.
+
 All mutation is lock-protected: slot threads record concurrently while
-the control plane reads reports.
+the control plane reads reports. Every event log is a BOUNDED deque with
+a dropped-count: a week-long soak run keeps the newest ``max_events``
+entries per log and reports how many older ones aged out, instead of
+growing host memory without bound.
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Callable, Dict, List, Tuple
 
 
@@ -43,9 +52,33 @@ def _stats(xs: List[float]) -> Dict[str, float]:
             "max": s[-1]}
 
 
+class _BoundedLog:
+    """Append-only event log capped at ``maxlen`` entries: the newest
+    events are retained, the eviction count is reported (``dropped``) so
+    a truncated log is never mistaken for a short run. NOT thread-safe on
+    its own — callers hold the telemetry lock."""
+
+    def __init__(self, maxlen: int):
+        self._q: deque = deque(maxlen=maxlen)
+        self.dropped = 0
+
+    def append(self, item):
+        if len(self._q) == self._q.maxlen:
+            self.dropped += 1
+        self._q.append(item)
+
+    def __len__(self):
+        return len(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+
 class FarmTelemetry:
-    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 max_events: int = 4096):
         self.clock = clock
+        self.max_events = max_events
         self.window_ms = defaultdict(list)      # slot -> drain latencies
         self.dispatch_ms = defaultdict(list)    # slot -> engine-call cost
         self.drain_wall_ms = defaultdict(list)  # slot -> fetch+verify wall
@@ -54,9 +87,16 @@ class FarmTelemetry:
         self.queue_depth = defaultdict(list)    # slot -> depth at assignment
         self.windows = defaultdict(int)         # slot -> drained windows
         self.vetoes = defaultdict(int)          # slot -> drain vetoes
-        self.evictions: List[Tuple[str, str, str]] = []  # (slot, job, why)
-        self.resumes: List[Dict] = []           # snapshot-resumed requeues
-        self.occupancy_samples: List[Tuple[int, int]] = []
+        self.evictions = _BoundedLog(max_events)    # {slot, job, why}
+        self.resumes = _BoundedLog(max_events)  # snapshot-resumed requeues
+        self.occupancy_samples = _BoundedLog(max_events)
+        # ----- failure-policy channels -----
+        self.retries = _BoundedLog(max_events)  # {job, attempt, backoff_s}
+        self.quarantined = _BoundedLog(max_events)      # {job, why}
+        self.breaker_events = _BoundedLog(max_events)   # {slot, event, ..}
+        self.fallbacks = _BoundedLog(max_events)        # snapshot fallbacks
+        self.faults = _BoundedLog(max_events)   # fault-recovery log
+        self.breaker_trips = defaultdict(int)   # slot -> trip count
         self._t: Dict[Tuple[str, object], float] = {}
         self._lock = threading.Lock()
 
@@ -113,6 +153,51 @@ class FarmTelemetry:
         with self._lock:
             self.occupancy_samples.append((active, total))
 
+    # -------------------------------------------- failure-policy events --
+    def retry(self, job: str, attempt: int, backoff_s: float, why: str):
+        """A failed attempt re-admitted under the job's retry budget,
+        after ``backoff_s`` of exponential backoff."""
+        with self._lock:
+            self.retries.append({"job": job, "attempt": int(attempt),
+                                 "backoff_s": float(backoff_s),
+                                 "why": why})
+
+    def quarantine(self, job: str, why: str):
+        """A job exhausted its retry budget and was dead-lettered: the
+        farm completes the rest and reports it instead of raising."""
+        with self._lock:
+            self.quarantined.append({"job": job, "why": why})
+
+    def breaker(self, slot: str, event: str, detail: str = ""):
+        """Circuit-breaker transition on ``slot``: ``trip`` (benched after
+        too many failures in the scoring window), ``probe`` (canary
+        dispatched), ``canary_pass``/``canary_fail``, ``readmit``."""
+        with self._lock:
+            self.breaker_events.append({"slot": slot, "event": event,
+                                        "detail": detail})
+            if event == "trip":
+                self.breaker_trips[slot] += 1
+
+    def fallback(self, slot: str, job: str, want_step: int, got_step,
+                 why: str):
+        """Snapshot integrity fallback: the restore at ``want_step`` hit a
+        corrupt/partial snapshot and landed on ``got_step`` (``None`` =
+        no verifiable snapshot — window-0 replay)."""
+        with self._lock:
+            self.fallbacks.append({
+                "slot": slot, "job": job, "want_step": int(want_step),
+                "got_step": None if got_step is None else int(got_step),
+                "why": why})
+
+    def fault(self, point: str, kind: str, job: str = "", slot: str = "",
+              event: str = "injected"):
+        """Fault-recovery log entry: the chaos harness records each
+        injection (``event="injected"``); the recovery paths record what
+        absorbed it (``event="recovered"`` with the policy applied)."""
+        with self._lock:
+            self.faults.append({"point": point, "kind": kind, "job": job,
+                                "slot": slot, "event": event})
+
     # ------------------------------------------------------------ report --
     def report(self) -> dict:
         with self._lock:
@@ -135,6 +220,21 @@ class FarmTelemetry:
             evs = list(self.evictions)
             resumes = [dict(r) for r in self.resumes]
             vetoes = sum(self.vetoes.values())
+            retries = [dict(r) for r in self.retries]
+            quarantined = [dict(q) for q in self.quarantined]
+            breaker_events = [dict(b) for b in self.breaker_events]
+            fallbacks = [dict(f) for f in self.fallbacks]
+            faults = [dict(f) for f in self.faults]
+            trips = dict(self.breaker_trips)
+            dropped = {name: log.dropped for name, log in (
+                ("evictions", self.evictions),
+                ("resumes", self.resumes),
+                ("occupancy", self.occupancy_samples),
+                ("retries", self.retries),
+                ("quarantined", self.quarantined),
+                ("breaker_events", self.breaker_events),
+                ("fallbacks", self.fallbacks),
+                ("faults", self.faults)) if log.dropped}
         return {
             "devices": devices,
             "occupancy_mean": (sum(a / t for a, t in occ if t) / len(occ)
@@ -145,6 +245,13 @@ class FarmTelemetry:
             "evictions": [{"slot": s, "job": j, "why": w}
                           for s, j, w in evs],
             "resumes": resumes,
+            "retries": retries,
+            "quarantined": quarantined,
+            "breaker_trips": trips,
+            "breaker_events": breaker_events,
+            "fallbacks": fallbacks,
+            "faults": faults,
+            "events_dropped": dropped,
         }
 
     def summary(self) -> str:
@@ -155,6 +262,24 @@ class FarmTelemetry:
                  f"{r['drain_vetoes']} drain vetoes, "
                  f"{len(r['evictions'])} evictions, "
                  f"{len(r['resumes'])} snapshot resumes"]
+        policy = []
+        if r["retries"]:
+            policy.append(f"{len(r['retries'])} retries")
+        if r["quarantined"]:
+            policy.append(f"{len(r['quarantined'])} quarantined")
+        if r["breaker_trips"]:
+            policy.append(
+                f"{sum(r['breaker_trips'].values())} breaker trips")
+        if r["fallbacks"]:
+            policy.append(f"{len(r['fallbacks'])} snapshot fallbacks")
+        if r["faults"]:
+            n_inj = sum(f["event"] == "injected" for f in r["faults"])
+            policy.append(f"{n_inj} faults injected")
+        if policy:
+            lines.append("  policy: " + ", ".join(policy))
+        if r["events_dropped"]:
+            lines.append("  dropped: " + ", ".join(
+                f"{k} {v}" for k, v in r["events_dropped"].items()))
         for slot, d in r["devices"].items():
             w = d["window_ms"]
             line = f"  {slot}: {d['windows']} windows"

@@ -38,12 +38,31 @@ telemetry resume log, and still delivered bit-identical outputs:
 
   PYTHONPATH=src python -m repro.launch.farm --restart-smoke
   PYTHONPATH=src python -m repro.launch.farm --restart-smoke --lockstep
+
+``--chaos SEED`` is the fault-recovery gate (CI ``farm-chaos-smoke``): a
+toy multi-board workload is run twice — once fault-free (the bit-identity
+oracle), once under a seeded ``ChaosHarness`` schedule injecting board
+crashes, hung drains, commit divergence, snapshot corruption/truncation,
+thread death, and results stalls — plus one genuinely poisoned board that
+must land in quarantine. The run exits non-zero unless every injected
+fault fired AND was recovered (eviction/fallback/veto evidence in
+telemetry), every non-quarantined board's outputs are bit-identical to
+the oracle, and the poisoned board was dead-lettered, not raised:
+
+  PYTHONPATH=src python -m repro.launch.farm --chaos 7
+  PYTHONPATH=src python -m repro.launch.farm --chaos 7 --lockstep
+
+SIGINT (^C) during a farm run is a GRACEFUL stop: every board is cut at
+its next drain boundary, committed prefixes and published snapshots are
+kept, the partial report + telemetry summary are printed, and the
+process exits 130. A second ^C kills immediately.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import signal
 import sys
 import time
 
@@ -56,8 +75,10 @@ from repro.core import DrainBarrier, plan_windows
 from repro.core.commit import default_shell_config, make_ingest
 from repro.core.pshell import PShell, drain, shell_init, stack_batches
 from repro.core.coemu import submit_subsystem_jobs
+from repro.core.watchdog import Watchdog
 from repro.data import SyntheticPipeline
-from repro.farm import FarmJob, FarmManager
+from repro.farm import FailurePolicy, FarmJob, FarmManager
+from repro.farm.chaos import ChaosHarness
 from repro.launch.serve import decode_shell_config, make_decode_engine
 from repro.models import build_model
 from repro.models.runtime import Runtime
@@ -66,6 +87,28 @@ from repro.serve import make_prefill_step
 from repro.train.optim import OptConfig
 from repro.train.step import init_state, make_group_step
 from repro.utils import dtype_of
+
+
+def _install_sigint(mgr):
+    """First ^C: graceful shutdown — the farm drains at the next barrier,
+    keeps its committed prefixes and published snapshots, and ``run()``
+    returns the partial report. Second ^C: hard KeyboardInterrupt.
+    Returns the previous handler (restore it when the run ends)."""
+    hits = {"n": 0}
+    prev = signal.getsignal(signal.SIGINT)
+
+    def handler(signum, frame):
+        hits["n"] += 1
+        if hits["n"] == 1:
+            print("SIGINT: draining farm at the next barrier "
+                  "(^C again to kill)", file=sys.stderr)
+            mgr.request_shutdown()
+        else:
+            signal.signal(signal.SIGINT, prev)
+            raise KeyboardInterrupt
+
+    signal.signal(signal.SIGINT, handler)
+    return prev
 
 
 def submit_train_job(mgr, cfg, steps, interval, batch=2, seq=16, seed=0,
@@ -283,10 +326,98 @@ def run_restart_smoke(mode: str = "async", slots: int = 3) -> dict:
     }
 
 
+def _chaos_board(mgr, name: str, scale: float, n_windows: int,
+                 max_requeues: int = 6) -> list:
+    """One toy chaos board: window *w* yields ``[w * scale]`` (analytic,
+    so divergence is detectable bit-exactly), a checkpoint barrier at
+    every window boundary (the snapshot-fault target), and a generous
+    requeue budget (chaos schedules at most one fault pair per board).
+    Returns the board's delivered-output list."""
+    @jax.jit
+    def _body(state, stack):
+        return state + jnp.sum(stack), stack * scale
+
+    def engine(state, shell, stack):
+        s, ys = _body(state, stack)
+        return s, shell, ys
+
+    outs: list = []
+    mgr.submit(FarmJob(
+        name=name, engine=engine,
+        windows=[[np.float32(w)] for w in range(n_windows)],
+        state=jnp.float32(0), shell={},
+        stack_fn=lambda it: jnp.asarray(np.stack(it)),
+        on_drain=lambda p, r, y: outs.append(np.asarray(y)),
+        barriers=(DrainBarrier(every=1, action=lambda s, b: None),),
+        max_requeues=max_requeues))
+    return outs
+
+
+def run_chaos_smoke(seed: int, mode: str = "async", slots: int = 4,
+                    n_jobs: int = 8, n_windows: int = 6) -> dict:
+    """The ``farm-chaos-smoke`` gate: run the toy workload fault-free
+    (the oracle), then again under the seed's injection schedule plus one
+    permanently-poisoned board. ``ok`` requires every injected fault
+    fired and recovered, non-quarantined outputs bit-identical to the
+    oracle, and the poisoned board quarantined (never raised)."""
+    def build(policy=None, timeout_s=600.0):
+        # straggler eviction OFF: wall-time heuristics are the one
+        # nondeterministic eviction source, and chaos needs the injected
+        # faults to be the ONLY faults
+        m = FarmManager(slots=slots, mode=mode, evict_stragglers=False,
+                        watchdog=Watchdog(timeout_s=timeout_s),
+                        poll_s=0.01, policy=policy)
+        o = {f"board{i}": _chaos_board(m, f"board{i}", float(i + 1),
+                                       n_windows) for i in range(n_jobs)}
+        return m, o
+
+    mgr0, oracle = build()
+    mgr0.run()
+
+    mgr, outs = build(policy=FailurePolicy(quarantine=True),
+                      timeout_s=1.5)
+    harness = ChaosHarness(mgr, seed)
+    schedule = harness.arm()
+
+    # the poison board: submitted AFTER arm() so no injection targets it
+    # — its engine genuinely always fails, and the farm must dead-letter
+    # it and still complete everything else
+    def poison_engine(state, shell, stack):
+        raise RuntimeError("poisoned board output bus")
+
+    mgr.submit(FarmJob(
+        name="poison", engine=poison_engine,
+        windows=[[np.float32(0)]], state=jnp.float32(0), shell={},
+        stack_fn=lambda it: jnp.asarray(np.stack(it)), max_requeues=2))
+
+    report = mgr.run(strict=False)
+    problems = harness.gate(report, expect_quarantined={"poison"})
+    for name in oracle:
+        same = (len(outs[name]) == len(oracle[name])
+                and all(np.array_equal(a, b)
+                        for a, b in zip(outs[name], oracle[name])))
+        if not same:
+            problems.append(f"{name}: outputs diverged from the "
+                            f"fault-free oracle")
+    return {
+        "mode": mode,
+        "seed": seed,
+        "schedule": [dataclasses.asdict(i) for i in schedule],
+        "faults_injected": len(harness.injector.fired),
+        "jobs": {n: j["status"] for n, j in report["jobs"].items()},
+        "quarantined": report["quarantined"],
+        "retries": len(report["telemetry"]["retries"]),
+        "fallbacks": report["telemetry"]["fallbacks"],
+        "breaker_trips": report["telemetry"]["breaker_trips"],
+        "problems": problems,
+        "ok": not problems,
+    }
+
+
 def run_farm(arch: str, steps: int, slots, interval: int = 2,
              synthetic_straggler: bool = False, straggler_factor: float = 6.0,
              roofline: bool = False, seed: int = 0,
-             mode: str = "async") -> dict:
+             mode: str = "async", handle_sigint: bool = False) -> dict:
     cfg = get_smoke_config(arch)
     # min_s floors the straggler RATIO check: the mixed workload's boards
     # legitimately differ in window cost (a decode window costs more than
@@ -335,7 +466,24 @@ def run_farm(arch: str, steps: int, slots, interval: int = 2,
             mgr.force_evict(straggler.name)
 
     prewarm_s = prewarm(mgr)
-    report = mgr.run(strict=False)
+    prev = _install_sigint(mgr) if handle_sigint else None
+    try:
+        report = mgr.run(strict=False)
+    finally:
+        if prev is not None:
+            signal.signal(signal.SIGINT, prev)
+    if report["interrupted"]:
+        # graceful stop: partial report + telemetry, no pass/fail gating —
+        # committed prefixes and published snapshots were kept
+        return {
+            "mode": mode,
+            "interrupted": True,
+            "prewarm_s": round(prewarm_s, 3),
+            "jobs": report["jobs"],
+            "telemetry": report["telemetry"],
+            "summary": mgr.telemetry.summary(),
+            "ok": False,
+        }
     reps = finalize()
 
     out = {
@@ -386,6 +534,11 @@ def main():
                          "eviction must resume from the last accepted "
                          "barrier snapshot (replayed < committed) with "
                          "bit-identical outputs")
+    ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
+                    help="fault-recovery gate: inject a seeded fault "
+                         "schedule; exit non-zero unless every fault was "
+                         "recovered with oracle-identical outputs and "
+                         "the poisoned board quarantined")
     g = ap.add_mutually_exclusive_group()
     g.add_argument("--async", dest="mode", action="store_const",
                    const="async", default="async",
@@ -403,11 +556,31 @@ def main():
             sys.exit(1)
         return
 
-    out = run_farm(args.arch, args.steps, args.slots,
-                   interval=args.sample_interval,
-                   synthetic_straggler=args.synthetic_straggler,
-                   straggler_factor=args.straggler_factor,
-                   roofline=args.roofline, mode=args.mode)
+    if args.chaos is not None:
+        out = run_chaos_smoke(args.chaos, mode=args.mode,
+                              slots=args.slots)
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
+
+    try:
+        out = run_farm(args.arch, args.steps, args.slots,
+                       interval=args.sample_interval,
+                       synthetic_straggler=args.synthetic_straggler,
+                       straggler_factor=args.straggler_factor,
+                       roofline=args.roofline, mode=args.mode,
+                       handle_sigint=True)
+    except KeyboardInterrupt:
+        # ^C before the farm was running (job setup / compile) or a
+        # second ^C during the graceful drain: nothing to keep, exit the
+        # conventional SIGINT code without a traceback
+        print("farm: interrupted before completion", file=sys.stderr)
+        sys.exit(130)
+    if out.get("interrupted"):
+        print(json.dumps(out, indent=1, default=float))
+        print(out["summary"], file=sys.stderr)
+        sys.exit(130)
     print(json.dumps(out, indent=1, default=float))
     if not out["ok"]:
         sys.exit(1)

@@ -303,3 +303,76 @@ def test_timing_timeline_overlap():
     assert t_ov["total_s"] == pytest.approx(4.0)      # max(1.0, 0.8) x4
     assert t_ser["total_s"] == pytest.approx(7.2)     # (1.0 + 0.8) x4
     assert t_ov["dominant"] == "compute"
+
+
+def test_watchdog_concurrent_observe_forget_stragglers_stress():
+    """Watchdog is hammered from slot threads (observe/heartbeat) while
+    the control thread polls stragglers()/dead_workers() and forgets
+    evicted workers: no exceptions, per-worker duration rings stay
+    bounded at 64 samples, and no sample ever lands on the wrong worker
+    (each worker observes only its own constant)."""
+    import threading
+
+    wd = Watchdog(timeout_s=60.0)
+    n_workers, iters, errors = 8, 300, []
+    stop = threading.Event()
+
+    def worker(i):
+        name = f"w{i}"
+        try:
+            for _ in range(iters):
+                wd.heartbeat(name, gap=False)
+                wd.observe(name, float(i + 1))
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                wd.stragglers(2.0)
+                wd.dead_workers()
+                wd.forget("ghost")                  # unknown name: no-op
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,),
+                                name=f"stress-w{i}")
+               for i in range(n_workers)]
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in readers + threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+
+    assert not errors
+    for i in range(n_workers):
+        name = f"w{i}"
+        samples = list(wd.durations[name])
+        assert len(samples) == 64                   # ring stays bounded
+        assert all(s == float(i + 1) for s in samples)
+        assert wd.threads[name] == f"stress-w{i}"
+
+    # concurrent forget vs observe on the SAME workers: still no
+    # exceptions, and any surviving ring holds only that worker's value
+    def churn(i):
+        name = f"w{i}"
+        try:
+            for _ in range(200):
+                wd.observe(name, float(i + 1))
+                wd.forget(name)
+        except Exception as e:                      # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn, args=(i,))
+               for i in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for i in range(n_workers):
+        assert all(s == float(i + 1)
+                   for s in wd.durations.get(f"w{i}", []))
