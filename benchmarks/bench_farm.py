@@ -31,10 +31,10 @@ GROUP = 2
 
 def _run(boards, slots: int, force_evict=None, sinks=None):
     mgr = FarmManager(slots=slots, evict_stragglers=False)
-    for i, (engine, x_ins, _) in enumerate(boards):
+    for i, (engine, state, x_ins, _, _) in enumerate(boards):
         name = f"board{i}"
         mgr.submit(FarmJob(
-            name=name, engine=engine,
+            name=name, engine=engine, state=state,
             windows=list(iter_windows(x_ins, GROUP)), shell={},
             stack_fn=_stack_on_device,
             on_drain=sinks[name] if sinks else None))

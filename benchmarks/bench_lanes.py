@@ -1,0 +1,95 @@
+"""Lane-batched boards: N identical-arch DUTs fused into ONE vmap-ed
+dispatch stream vs the same N boards as solo farm jobs. The workload is
+deliberately dispatch-overhead-dominated (many small boards, one slot):
+solo mode pays one host->device dispatch round-trip per board per window,
+lane mode pays ONE per window for all boards — the boards-per-second
+scaling claim of the lane-batching layer. Interleaved A/B pairs as in
+bench_farm (this shared CPU drifts between measurement blocks)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import DrainBarrier
+from repro.farm import FarmJob, FarmManager
+
+N_BOARDS = 16
+N_STEPS = 32
+GROUP = 2
+
+W = jnp.asarray(np.random.RandomState(0).randn(16, 16).astype(np.float32))
+
+
+@jax.jit
+def _body(state, stack):
+    def step(s, x):
+        y = jnp.tanh(x @ s["w"]) + s["bias"]
+        return ({"bias": s["bias"] + 0.01 * jnp.sum(y), "w": s["w"]},
+                jnp.sum(y, axis=-1))
+    return jax.lax.scan(step, state, stack)
+
+
+def _engine(state, shell, stack):
+    s, ys = _body(state, stack)
+    return s, shell, ys
+
+
+def _stack(items):
+    return jnp.asarray(np.stack(items))
+
+
+def _windows(seed):
+    rng = np.random.RandomState(seed)
+    items = [rng.randn(4, 16).astype(np.float32) for _ in range(N_STEPS)]
+    return [items[i:i + GROUP] for i in range(0, N_STEPS, GROUP)]
+
+
+def _run(lanes: int):
+    mgr = FarmManager(slots=1, mode="lockstep", evict_stragglers=False,
+                      lanes=lanes)
+    for i in range(N_BOARDS):
+        mgr.submit(FarmJob(
+            name=f"b{i}", engine=_engine, windows=_windows(i),
+            state={"bias": jnp.float32(i) * 0.5, "w": W}, shell={},
+            stack_fn=_stack,
+            barriers=(DrainBarrier(every=2, action=lambda s, b: None),),
+            lane_key="bench"))
+    mgr.run()
+
+
+def main():
+    lane_counts = [1, 4, 8, 16]
+    for lanes in lane_counts:
+        _run(lanes)                                 # compile each shape
+
+    # interleaved pairs: solo (lanes=1) alternating with each lane count
+    times = {n: [] for n in lane_counts}
+    for _ in range(5):
+        for lanes in lane_counts:
+            t0 = time.perf_counter()
+            _run(lanes)
+            times[lanes].append(time.perf_counter() - t0)
+
+    med = {n: sorted(ts)[len(ts) // 2] for n, ts in times.items()}
+    bps = {n: N_BOARDS / med[n] for n in lane_counts}
+    won8 = sum(1 for a, b in zip(times[1], times[8]) if a > b)
+    for lanes in lane_counts:
+        emit(f"farm_lanes_{lanes}", med[lanes] * 1e6 / N_BOARDS,
+             f"boards={N_BOARDS}|lanes={lanes}"
+             f"|boards_per_s={bps[lanes]:.0f}")
+    emit("farm_lanes_vs_solo", med[8] * 1e6 / N_BOARDS,
+         f"boards={N_BOARDS}|windows={N_STEPS // GROUP}"
+         f"|speedup_4={med[1] / med[4]:.2f}x"
+         f"|speedup_8={med[1] / med[8]:.2f}x"
+         f"|speedup_16={med[1] / med[16]:.2f}x"
+         f"|boards_per_s_solo={bps[1]:.0f}"
+         f"|boards_per_s_8={bps[8]:.0f}"
+         f"|pairs_won_8={won8}/{len(times[1])}")
+
+
+if __name__ == "__main__":
+    main()

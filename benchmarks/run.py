@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.bench_panicroom",     # Table II — portability
     "benchmarks.bench_coemu",         # §IV-A    — verify throughput
     "benchmarks.bench_farm",          # ZP-Farm  — farm-vs-serial boards
+    "benchmarks.bench_lanes",         # ZP-Farm  — lane-batched boards
 ]
 
 

@@ -54,6 +54,7 @@ class Divergence:
     step: int
     layer: int
     rel_err: float
+    lane: Optional[int] = None      # lane-batched runs: which board
 
 
 @dataclasses.dataclass
@@ -247,13 +248,16 @@ class CommitDivergence(RuntimeError):
     diverge from the oracle — inside the scheduler's ``on_drain``, this
     vetoes any DrainBarrier commit (checkpoint save) behind the window."""
 
-    def __init__(self, step: int, layer: int, rel_err: float):
+    def __init__(self, step: int, layer: int, rel_err: float,
+                 lane: Optional[int] = None):
+        at_lane = "" if lane is None else f" lane {lane}"
         super().__init__(
-            f"commit stream diverged at step {step} layer {layer} "
-            f"(rel-err {rel_err:.2e}); checkpoint vetoed")
+            f"commit stream diverged at step {step} layer {layer}"
+            f"{at_lane} (rel-err {rel_err:.2e}); checkpoint vetoed")
         self.step = step
         self.layer = layer
         self.rel_err = rel_err
+        self.lane = lane
 
 
 class CommitStreamVerifier:
@@ -283,7 +287,8 @@ class CommitStreamVerifier:
     """
 
     def __init__(self, oracle_step: Callable, state, batches,
-                 layers: int, rtol: float = 1e-5, start_step: int = 0):
+                 layers: int, rtol: float = 1e-5, start_step: int = 0,
+                 lane: Optional[int] = None):
         self.oracle_step = oracle_step
         self.state = state
         self._batches_src = batches
@@ -292,6 +297,8 @@ class CommitStreamVerifier:
         self.rtol = rtol
         self.step = start_step      # resume: report true global step ids
         self._consumed = 0          # batches taken from the stream so far
+        self.lane = lane            # lane-batched boards: divergences name
+        # the lane, so a fused farm run localizes the veto to ONE board
 
     def _iter_batches(self):
         b = self._batches_src
@@ -315,7 +322,8 @@ class CommitStreamVerifier:
             if bad.size:
                 l = int(bad[0])
                 raise CommitDivergence(step=self.step + s, layer=l,
-                                       rel_err=float(err[l]))
+                                       rel_err=float(err[l]),
+                                       lane=self.lane)
         self.step += steps
 
     # ------------------------------------------------------------- resume --
@@ -358,45 +366,62 @@ def subsystem_boards(params, cfg, rt, xs: Sequence, positions,
     """Build the multi-DUT farm boards: for each activation batch in ``xs``
     (the "steps"), an in-situ unrolled run over ``params`` captures every
     block's boundary traffic (the oracle); each layer in ``layer_idxs``
-    becomes one DUT board — the ``extract_block`` subsystem (from
-    ``dut_params``, defaulting to the oracle's params) replayed standalone
-    over its captured inputs, scan-fused per window. Returns one
-    ``(engine, x_ins, oracle_cks)`` triple per layer (engines are jitted
-    once here, so callers can rerun them without recompiling)."""
-    from repro.core.decompose import extract_block, unrolled_capture
+    becomes one DUT board — its extracted subsystem (from ``dut_params``,
+    defaulting to the oracle's params) replayed standalone over its
+    captured inputs, scan-fused per window.
+
+    Returns one ``(engine, state, x_ins, oracle_cks, lane_key)`` tuple per
+    layer. Boards sharing a block spec share ONE jitted engine whose
+    block params ride as the board's STATE (not a per-engine closure):
+    same-spec boards are lane-batchable under ``lane_key``, the farm's
+    identity-aware lane packing broadcasts any params shared across
+    boards instead of replicating them per board, and extraction is a
+    single :func:`~repro.core.decompose.extract_blocks` walk instead of
+    one full-stack re-walk per board."""
+    from repro.core.decompose import extract_blocks, unrolled_capture
+    from repro.models import transformer as tfm
 
     captures = [unrolled_capture(params, cfg, x, positions, rt)[1]
                 for x in xs]                       # [step][layer] records
     batch, seq = xs[0].shape[0], xs[0].shape[1]
+    subs = extract_blocks(dut_params if dut_params is not None else params,
+                          cfg, layer_idxs, rt, batch, seq)
 
-    boards = []
-    for li in layer_idxs:
-        sub = extract_block(dut_params if dut_params is not None else params,
-                            cfg, li, rt, batch, seq)
+    engines = {}                    # spec -> ONE engine for all its boards
 
-        def make_engine(fn):
-            def window_fn(stack):
-                return jax.lax.map(
-                    lambda x: _activation_checksum(fn(x, positions)), stack)
+    def shared_engine(spec):
+        if spec not in engines:
+            def window_fn(tree, stack):
+                def step(x):
+                    y, _ = tfm.block_apply(tree, cfg, spec, x,
+                                           positions, rt)
+                    return _activation_checksum(y)
+                return jax.lax.map(step, stack)
             jitted = jax.jit(window_fn)
 
             def engine(state, shell, stack):
-                return state, shell, jitted(stack)
+                return state, shell, jitted(state, stack)
 
-            return engine
+            engines[spec] = engine
+        return engines[spec]
 
+    boards = []
+    for li in layer_idxs:
+        sub = subs[li]
         x_ins = [captures[s][li]["x_in"] for s in range(len(xs))]
         oracle_cks = np.stack([
             np.asarray(_activation_checksum(captures[s][li]["x_out"]),
                        np.float64)
             for s in range(len(xs))])              # (steps, 2)
-        boards.append((make_engine(sub.fn), x_ins, oracle_cks))
+        boards.append((shared_engine(sub.spec), sub.params, x_ins,
+                       oracle_cks, f"subsys:{sub.spec[0]}+{sub.spec[1]}"))
     return boards
 
 
 def submit_subsystem_jobs(farm, params, cfg, rt, xs: Sequence, positions,
                           layer_idxs: Sequence[int], group_size: int = 2,
-                          rtol: float = 5e-2, dut_params=None):
+                          rtol: float = 5e-2, dut_params=None,
+                          lanes: bool = False):
     """Submit one verification FarmJob per extracted subsystem to ``farm``
     (a ``repro.farm.FarmManager``) and return a zero-arg ``finalize``
     producing the per-subsystem ``CoEmuReport``\\ s once the farm ran.
@@ -405,13 +430,19 @@ def submit_subsystem_jobs(farm, params, cfg, rt, xs: Sequence, positions,
     an evicted + requeued board's replayed windows are never
     double-counted. A divergence localizes a fault to the exact (step,
     subsystem) — it is RECORDED in the report, not raised, so a diverging
-    board never takes down the farm pass."""
+    board never takes down the farm pass.
+
+    ``lanes=True`` tags each job with its block-spec ``lane_key`` so a
+    lane-capable farm coalesces same-spec subsystem boards into one
+    vmap-ed dispatch stream (they already share one engine, and the lane
+    packer broadcasts any param leaves shared across boards)."""
     from repro.farm.manager import FarmJob
 
     boards = subsystem_boards(params, cfg, rt, xs, positions, layer_idxs,
                               dut_params=dut_params)
     accs = []
-    for li, (engine, x_ins, oracle_cks) in zip(layer_idxs, boards):
+    for li, (engine, state, x_ins, oracle_cks, lane_key) in zip(layer_idxs,
+                                                                boards):
         acc = _CompareAccumulator(rtol)
         accs.append(acc)
 
@@ -423,9 +454,10 @@ def submit_subsystem_jobs(farm, params, cfg, rt, xs: Sequence, positions,
             acc.steps += cks_d.shape[0]
 
         farm.submit(FarmJob(
-            name=f"layer{li}", engine=engine,
+            name=f"layer{li}", engine=engine, state=state,
             windows=list(iter_windows(x_ins, group_size)), shell={},
-            stack_fn=_stack_on_device, on_drain=sink))
+            stack_fn=_stack_on_device, on_drain=sink,
+            lane_key=lane_key if lanes else None))
 
     def finalize() -> Dict[str, CoEmuReport]:
         out = {}
@@ -444,7 +476,7 @@ def submit_subsystem_jobs(farm, params, cfg, rt, xs: Sequence, positions,
 def verify_subsystems(params, cfg, rt, xs: Sequence, positions,
                       layer_idxs: Sequence[int], group_size: int = 2,
                       rtol: float = 5e-2, dut_params=None,
-                      farm=None) -> Dict[str, CoEmuReport]:
+                      farm=None, lanes: bool = False) -> Dict[str, CoEmuReport]:
     """Multi-DUT (ZP-Farm) mode: verify several extracted subsystems as
     independent boards of one farm pass (see ``submit_subsystem_jobs``).
     ``farm=None`` builds a dedicated ``FarmManager`` with one slot per
@@ -463,10 +495,12 @@ def verify_subsystems(params, cfg, rt, xs: Sequence, positions,
     # legitimately differ in window cost); callers who want eviction pass
     # their own farm
     mgr = farm if farm is not None else FarmManager(
-        slots=len(layer_idxs), evict_stragglers=False)
+        slots=len(layer_idxs), evict_stragglers=False,
+        lanes=len(layer_idxs) if lanes else 1)
     finalize = submit_subsystem_jobs(
         mgr, params, cfg, rt, xs, positions, layer_idxs,
-        group_size=group_size, rtol=rtol, dut_params=dut_params)
+        group_size=group_size, rtol=rtol, dut_params=dut_params,
+        lanes=lanes)
     mgr.run()
     return finalize()
 

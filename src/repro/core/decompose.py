@@ -40,33 +40,20 @@ def iter_layer_params(params, cfg):
 
 @dataclasses.dataclass
 class Subsystem:
-    """An extracted block: pure fn + its interface specs + golden oracle."""
+    """An extracted block: pure fn + its interface specs + golden oracle.
+    ``params`` is the block's own param slice — ``fn`` closes over it, and
+    lane-batched callers pass it separately as board STATE so same-spec
+    boards can share ONE parameterized engine."""
     name: str
     layer_idx: int
     spec: Tuple[str, Optional[str]]
     fn: Callable          # (x, positions) -> x'
     input_specs: Dict[str, jax.ShapeDtypeStruct]
+    params: Any = None
 
 
-def extract_block(params, cfg, layer_idx: int, rt: Runtime,
-                  batch: int, seq: int) -> Subsystem:
-    if not 0 <= layer_idx < cfg.num_layers:
-        # smoke archs are tiny (granite-8b and glm4-9b have 2 decoder
-        # layers) — name the arch and its layer count instead of letting a
-        # bare IndexError escape from the stacked-params walk
-        raise ValueError(
-            f"layer_idx {layer_idx} out of range for arch {cfg.name!r}: "
-            f"{cfg.num_layers} decoder layers (valid: 0.."
-            f"{cfg.num_layers - 1})")
-    target = None
-    for idx, spec, tree in iter_layer_params(params, cfg):
-        if idx == layer_idx:
-            target = (spec, tree)
-            break
-    if target is None:
-        raise IndexError(layer_idx)
-    spec, tree = target
-
+def _block_subsystem(layer_idx: int, spec, tree, cfg, rt: Runtime,
+                     batch: int, seq: int) -> Subsystem:
     def fn(x, positions):
         y, _ = tfm.block_apply(tree, cfg, spec, x, positions, rt)
         return y
@@ -79,7 +66,41 @@ def extract_block(params, cfg, layer_idx: int, rt: Runtime,
     }
     return Subsystem(name=f"layer{layer_idx}:{spec[0]}+{spec[1]}",
                      layer_idx=layer_idx, spec=spec, fn=fn,
-                     input_specs=specs)
+                     input_specs=specs, params=tree)
+
+
+def extract_blocks(params, cfg, layer_idxs, rt: Runtime,
+                   batch: int, seq: int) -> Dict[int, Subsystem]:
+    """Single-walk multi-block extraction: ONE pass over
+    ``iter_layer_params`` materializes exactly the requested layers'
+    param slices. Per-board ``extract_block`` calls each re-walk the
+    stacked params and materialize every earlier layer's slice along the
+    way — O(boards x layers) slice materializations that
+    ``subsystem_boards`` used to pay per farm build."""
+    want = set(layer_idxs)
+    bad = sorted(li for li in want if not 0 <= li < cfg.num_layers)
+    if bad:
+        # smoke archs are tiny (granite-8b and glm4-9b have 2 decoder
+        # layers) — name the arch and its layer count instead of letting a
+        # bare IndexError escape from the stacked-params walk
+        raise ValueError(
+            f"layer_idx {bad[0]} out of range for arch {cfg.name!r}: "
+            f"{cfg.num_layers} decoder layers (valid: 0.."
+            f"{cfg.num_layers - 1})")
+    out = {}
+    for idx, spec, tree in iter_layer_params(params, cfg):
+        if idx in want:
+            out[idx] = _block_subsystem(idx, spec, tree, cfg, rt,
+                                        batch, seq)
+            if len(out) == len(want):
+                break
+    return out
+
+
+def extract_block(params, cfg, layer_idx: int, rt: Runtime,
+                  batch: int, seq: int) -> Subsystem:
+    return extract_blocks(params, cfg, [layer_idx], rt,
+                          batch, seq)[layer_idx]
 
 
 def unrolled_capture(params, cfg, x, positions, rt: Runtime):

@@ -51,9 +51,12 @@ the bare 4-tuple form is unchanged):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Iterable, List, Optional, Sequence
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
 from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.pshell import _reset_jitted
 from repro.core.pshell import drain as shell_drain
@@ -120,6 +123,7 @@ class Client:
     barriers: Sequence = ()
     start_step: int = 0
     start_index: int = 0
+    lanes: int = 1      # >1: a LaneBatch-fused client driving N boards
 
 
 class ClientPolicy:
@@ -603,3 +607,231 @@ class ClientDriver:
         self.pending = None
         self._dispatched = None
         self.exhausted = True
+
+
+# ------------------------------------------------------------------ lanes --
+def lane_pack(trees):
+    """Stack N same-structure pytrees along a NEW leading lane axis.
+
+    The packing is identity-aware (the stacked-weight memory fix): a leaf
+    that is the SAME object in every lane — a weight tree shared across
+    boards — is NOT stacked; it passes through as ONE array with a ``None``
+    vmap axis, so N lanes hold one device copy instead of N. Returns
+    ``(packed, axes_tree, flat_axes)`` where ``axes_tree`` is the pytree
+    handed to ``vmap`` as in/out_axes (0 = stacked, None = broadcast) and
+    ``flat_axes`` is the same information in flat leaf order, which is what
+    :func:`lane_slice` consumes to undo the packing per lane.
+    """
+    if all(t is None for t in trees):
+        return None, None, []
+    treedef = jax.tree.structure(trees[0])
+    for t in trees[1:]:
+        if jax.tree.structure(t) != treedef:
+            raise ValueError("lane_pack: lane trees differ in structure "
+                             f"({treedef} vs {jax.tree.structure(t)})")
+    packed, axes = [], []
+    for group in zip(*(jax.tree.leaves(t) for t in trees)):
+        if all(g is group[0] for g in group[1:]):
+            packed.append(group[0])
+            axes.append(None)
+        else:
+            packed.append(jnp.stack([jnp.asarray(g) for g in group]))
+            axes.append(0)
+    return (jax.tree.unflatten(treedef, packed),
+            jax.tree.unflatten(treedef, axes), axes)
+
+
+def lane_slice(tree, flat_axes, k):
+    """Lane ``k``'s view of a packed tree: stacked leaves are indexed at
+    the lane axis, broadcast (shared) leaves pass through untouched."""
+    if tree is None:
+        return None
+    leaves, treedef = jax.tree.flatten(tree)
+    out = [x if a is None else x[k] for x, a in zip(leaves, flat_axes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def lane_fetch(tree, flat_axes):
+    """ONE host fetch for a packed tree's stacked leaves (broadcast leaves
+    pass through as their device arrays — a shared weight tree is never
+    pulled to the host). Per-lane fan-out then takes numpy views of the
+    fetched leaves instead of issuing one device gather + transfer per
+    lane — N gathers per window is exactly the dispatch overhead lane
+    batching exists to remove."""
+    if tree is None:
+        return None
+    leaves, treedef = jax.tree.flatten(tree)
+    fetched = iter(jax.device_get(
+        [x for x, a in zip(leaves, flat_axes) if a == 0]))
+    out = [next(fetched) if a == 0 else x
+           for x, a in zip(leaves, flat_axes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# (engine-or-reset, packed treedefs, vmap axes) -> jitted vmap wrapper.
+# Without this every LaneBatch built over the same base engine — e.g. each
+# farm pass that coalesces a fresh batch of compatible jobs — would wrap a
+# NEW jit(vmap(engine)) object and recompile from scratch, costing more
+# than the dispatch fusion saves. Keyed on the engine OBJECT (kept alive
+# by the key, same rationale as CoEmulator._group_fns: object keys make
+# no-aliasing unconditional where id() keys would not).
+_FUSED_CACHE: Dict[Any, Callable] = {}
+
+
+class LaneBatch:
+    """N identical-arch boards fused into ONE dispatch stream.
+
+    The solo engine is wrapped in ``jit(vmap(...))`` over a leading lane
+    axis, the per-lane window streams are zipped step-for-step, and the
+    per-lane states/shells are :func:`lane_pack`-ed — so the existing
+    ``lax.scan`` window dispatch drives N boards per device call while
+    ``WindowPlan`` ids, barrier cadences, and drain ordering stay exactly
+    what each solo board would have seen.
+
+    Compatibility contract (what "identical-arch" means here):
+
+      * ONE shared jax-traceable ``engine`` object — host side effects
+        (sleeps, python counters) do not survive the vmap trace;
+      * equal window counts AND equal per-window sizes across lanes
+        (streams are zipped per step, tail windows included);
+      * same state/shell tree structure with stackable leaf shapes; a leaf
+        shared BY IDENTITY across every lane broadcasts as one device
+        copy with a ``None`` vmap axis (the stacked-weight fix);
+      * a ``stack_fn`` is required (raw per-step item lists cannot stack
+        across lanes); ``drain_fn``/``reset`` are optional and are applied
+        per lane against shell slices, with drains fanned out as
+        ``{"lanes": [records_0, ...records_{N-1}]}``.
+
+    The fused engine never donates: member state/shell objects stay valid
+    replay sources if a lane is evicted and requeued as a solo board.
+    """
+
+    def __init__(self, engine, windows, states, shells, *, stack_fn,
+                 drain_fn=None, reset=None):
+        n = len(states)
+        if n < 1 or not (len(windows) == len(shells) == n):
+            raise ValueError("LaneBatch: windows/states/shells must be "
+                             "equal-length and non-empty")
+        if stack_fn is None:
+            raise ValueError("LaneBatch requires a stack_fn")
+        if drain_fn is shell_drain and reset is None:
+            reset = _reset_jitted()     # same default a solo client gets
+        if drain_fn is not None and reset is None:
+            raise ValueError("LaneBatch: a custom drain_fn needs an "
+                             "explicit reset (fused drains are deferred)")
+        self.n = n
+        self.base_engine = engine
+        self.base_stack = stack_fn
+        self.base_drain = drain_fn
+        self.base_reset = reset
+        self.state, self.state_axes, self._state_flat = lane_pack(states)
+        self.shell, self.shell_axes, self._shell_flat = lane_pack(shells)
+        self.windows = self.zip_windows(windows)
+        self.engine = self._fuse_engine(engine)
+        self.stack_fn = self._fused_stack
+        self.drain_fn = self._fused_drain if drain_fn is not None else None
+        self.reset = self._fuse_reset(reset)
+
+    # ---------------------------------------------------------- builders --
+    @staticmethod
+    def zip_windows(window_lists):
+        """Zip per-lane window streams into one fused stream whose plans
+        (window count, per-window sizes, step ids) match every solo lane."""
+        counts = {len(w) for w in window_lists}
+        if len(counts) != 1:
+            raise ValueError("LaneBatch: lanes disagree on window count: "
+                             f"{sorted(counts)}")
+        fused = []
+        for w, row in enumerate(zip(*window_lists)):
+            sizes = {len(items) for items in row}
+            if len(sizes) != 1:
+                raise ValueError(f"LaneBatch: window {w} sizes differ "
+                                 f"across lanes: {sorted(sizes)}")
+            fused.append([tuple(step) for step in zip(*row)])
+        return fused
+
+    def _tree_key(self, tree, flat):
+        return (None if tree is None else jax.tree.structure(tree),
+                tuple(flat))
+
+    def _fuse_engine(self, engine):
+        key = ("engine", engine,
+               self._tree_key(self.state, self._state_flat),
+               self._tree_key(self.shell, self._shell_flat))
+        if key not in _FUSED_CACHE:
+            _FUSED_CACHE[key] = jax.jit(jax.vmap(
+                engine, in_axes=(self.state_axes, self.shell_axes, 0),
+                out_axes=(self.state_axes, self.shell_axes, 0)))
+        return _FUSED_CACHE[key]
+
+    def _fuse_reset(self, reset):
+        if reset is None:
+            return None
+        if not any(a == 0 for a in self._shell_flat):
+            return reset            # fully shared shell: nothing to map
+        key = ("reset", reset,
+               self._tree_key(self.shell, self._shell_flat))
+        if key not in _FUSED_CACHE:
+            _FUSED_CACHE[key] = jax.jit(jax.vmap(
+                reset, in_axes=(self.shell_axes,),
+                out_axes=self.shell_axes))
+        return _FUSED_CACHE[key]
+
+    def _fused_stack(self, items):
+        # items: [step][lane]; restack per lane with the base stack_fn so
+        # each lane's payload is byte-identical to its solo run's, then add
+        # the leading lane axis (one contiguous upload per leaf). The
+        # cross-lane stack is jitted (cached): eager jnp.stack re-traces
+        # expand_dims + concat per window, which costs more per window
+        # than the fused dispatch saves.
+        per_lane = list(zip(*items))
+        stacks = [self.base_stack(list(steps)) for steps in per_lane]
+        key = ("stack", self.n, jax.tree.structure(stacks[0]))
+        if key not in _FUSED_CACHE:
+            _FUSED_CACHE[key] = jax.jit(
+                lambda *xs: jax.tree.map(lambda *ys: jnp.stack(ys), *xs))
+        return _FUSED_CACHE[key](*stacks)
+
+    def _fused_drain(self, snap):
+        recs, resets = [], []
+        for k in range(self.n):
+            r, s = self.base_drain(self.slice_shell(snap, k))
+            recs.append(r)
+            resets.append(s)
+        # re-pack the per-lane reset shells: serial (non-overlap) mode makes
+        # this the live shell, overlap mode discards it after the drain
+        treedef = jax.tree.structure(resets[0])
+        packed = [g[0] if a is None
+                  else jnp.stack([jnp.asarray(x) for x in g])
+                  for g, a in zip(zip(*(jax.tree.leaves(s) for s in resets)),
+                                  self._shell_flat)]
+        return {"lanes": recs}, jax.tree.unflatten(treedef, packed)
+
+    # ------------------------------------------------------------ fan-out --
+    def slice_state(self, state, k):
+        return lane_slice(state, self._state_flat, k)
+
+    def slice_shell(self, shell, k):
+        return lane_slice(shell, self._shell_flat, k)
+
+    def fetch_state(self, state):
+        """See :func:`lane_fetch` — host views for per-lane state fan-out."""
+        return lane_fetch(state, self._state_flat)
+
+    def fetch_shell(self, shell):
+        return lane_fetch(shell, self._shell_flat)
+
+    def fan_out_one(self, records, ys, k):
+        """Lane ``k``'s (records, ys) exactly as its solo run would have
+        delivered them to ``on_drain``."""
+        rec = records["lanes"][k] if self.drain_fn is not None else records
+        return rec, jax.tree.map(lambda y: y[k], ys)
+
+    def fan_out(self, records, ys):
+        return [self.fan_out_one(records, ys, k) for k in range(self.n)]
+
+    def client(self, *, barriers=()) -> Client:
+        """A ready-to-run fused :class:`Client` for this batch."""
+        return Client(self.engine, self.windows, self.state, self.shell,
+                      drain_fn=self.drain_fn, stack_fn=self.stack_fn,
+                      reset=self.reset, barriers=barriers, lanes=self.n)

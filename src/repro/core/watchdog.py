@@ -58,14 +58,17 @@ class Watchdog:
             self.last_beat[worker] = now
             self.threads[worker] = threading.current_thread().name
 
-    def observe(self, worker: str, duration_s: float):
+    def observe(self, worker: str, duration_s: float, lanes: int = 1):
         """Record an explicitly measured duration sample (one window's
         dispatch cost in lockstep mode, one window's measured wall in async
         mode) without touching liveness state. Tagged with the calling
         thread's name — in the async farm each worker's samples must all
-        come from its own slot thread."""
+        come from its own slot thread. ``lanes`` normalizes a lane-batched
+        window to per-board cost: a 16-lane dispatch does 16 boards of
+        work per window, and must not be flagged as a 16x straggler
+        against solo boards on the same fleet."""
         with self._lock:
-            self.durations[worker].append(duration_s)
+            self.durations[worker].append(duration_s / max(1, lanes))
             self.threads[worker] = threading.current_thread().name
 
     def forget(self, worker: str):

@@ -117,8 +117,9 @@ import numpy as np
 
 from repro.checkpoint.manager import (MemorySnapshotStore,
                                       SnapshotIntegrityError)
+from repro.core.pshell import drain as _shell_drain
 from repro.core.schedule import (Client, ClientPolicy, DrainBarrier,
-                                 WindowScheduler)
+                                 LaneBatch, WindowScheduler)
 from repro.core.watchdog import Watchdog
 from repro.farm.placement import (DeviceSlot, enumerate_slots, pick_slot,
                                   place, place_stack)
@@ -201,6 +202,56 @@ def _replay_copy(tree):
         lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x, tree)
 
 
+def _lane_shape(tree):
+    """(treedef, leaf shapes) signature used to decide whether two jobs'
+    states/shells pack into one lane batch; ``None`` for factories."""
+    if callable(tree):
+        return None
+    leaves, treedef = jax.tree.flatten(tree)
+    return treedef, tuple(np.shape(x) for x in leaves)
+
+
+def lane_compatible(a: "FarmJob", b: "FarmJob") -> Optional[str]:
+    """``None`` if ``b`` can ride in the same :class:`LaneBatch` as ``a``,
+    else the reason it cannot (the coalescer then leaves ``b`` queued for
+    its own — possibly solo — dispatch). The rules are exactly the fused
+    execution's requirements: one shared engine object, identical
+    scheduler plumbing, step-for-step zippable window streams, matching
+    barrier cadences, stackable state/shell trees, and a fresh stream on
+    both sides (a mid-stream resume has a solo cursor to honor)."""
+    if a.lane_key is None or a.lane_key != b.lane_key:
+        return "lane_key"
+    if b.engine is not a.engine:
+        return "engine"
+    if a.stack_fn is None or b.stack_fn is not a.stack_fn:
+        return "stack_fn"
+    if b.drain_fn is not a.drain_fn or b.reset is not a.reset:
+        return "shell plumbing"
+    if a.drain_fn is not None and a.reset is None \
+            and a.drain_fn is not _shell_drain:
+        return "drain_fn without reset"     # fused drains are deferred
+    if a.capture is not None or b.capture is not None:
+        return "capture"
+    if a.snapshot is not None or b.snapshot is not None \
+            or a.committed_outputs or b.committed_outputs:
+        return "mid-stream resume"
+    if callable(a.state) or callable(b.state) \
+            or callable(a.shell) or callable(b.shell):
+        return "state factory"
+    if not isinstance(a.windows, list) or not isinstance(b.windows, list):
+        return "window stream not a list"
+    if len(a.windows) != len(b.windows) or any(
+            len(x) != len(y) for x, y in zip(a.windows, b.windows)):
+        return "window shape"
+    if tuple(x.every for x in a.barriers) \
+            != tuple(x.every for x in b.barriers):
+        return "barrier cadence"
+    if _lane_shape(a.state) != _lane_shape(b.state) \
+            or _lane_shape(a.shell) != _lane_shape(b.shell):
+        return "state/shell shape"
+    return None
+
+
 @dataclasses.dataclass
 class FarmJob:
     """One farm workload. ``windows`` is a list of per-step item lists (or
@@ -235,6 +286,8 @@ class FarmJob:
     capture: Any = None                 # roofline.WindowCapture, optional
     max_requeues: int = 1
     snapshot_store: Any = None          # CheckpointManager-like, per job
+    lane_key: Optional[str] = None      # non-None: coalescible with same-key
+    # jobs into ONE lane-batched (vmap-fused) run on a lane-capable slot
 
     # ----- runtime bookkeeping (owned by the manager) -----
     requeues: int = dataclasses.field(default=0, init=False)
@@ -281,6 +334,16 @@ class _Run:
         self.closed = False
         self.start_window = 0           # resume cursor this attempt began at
         self.snapshot: Optional[JobSnapshot] = None     # latest commit here
+        # ----- lane-batched (fused) runs only -----
+        self.lanes: Optional[List[FarmJob]] = None      # member jobs
+        self.lane_batch = None                          # the LaneBatch
+        self.lane_outputs: Optional[List[List]] = None  # per-lane drains
+        self.lane_faults: Dict[int, BaseException] = {}  # lane -> veto
+        self.lane_detached: set = set()                 # lanes requeued solo
+
+    @property
+    def lane_count(self) -> int:
+        return len(self.lanes) if self.lanes else 1
 
 
 _STOP = object()
@@ -365,10 +428,27 @@ class _SlotWorker(threading.Thread):
                 # measured window WALL (dispatch -> results in hand) is the
                 # async straggler signal; window 0 pays jit compilation
                 # (the farm analog of bitstream build time), a known
-                # one-off, not slowness
-                mgr.wd.observe(self.slot.name, mgr.clock() - td)
+                # one-off, not slowness; a lane-batched window is N boards
+                # of work, normalized to per-board cost
+                mgr.wd.observe(self.slot.name, mgr.clock() - td,
+                               lanes=run.lane_count)
             if job.capture is not None:
                 job.capture.on_drain(plan, records, ys)
+            if run.lanes is not None:
+                # per-lane fan-out + verify on the slot thread; a veto
+                # masks ITS lane only (this thread owns lane_faults, so
+                # later commits on this run already skip the lane)
+                delivered, faulted = mgr._lane_ingest(run, plan,
+                                                      records, ys)
+                if faulted and len(run.lane_faults) == len(run.lanes):
+                    run.fault = faulted[-1][1]      # every lane dead
+                mgr.telemetry.drain(self.slot.name, mgr._key(run, plan),
+                                    wall_s=mgr.clock() - t0)
+                mgr._inject("results.post", job=job.name,
+                            slot=self.slot.name)
+                mgr._results.put(("lane_drain", run, plan, delivered,
+                                  faulted))
+                return
             if job.verify is not None and run.fault is None:
                 try:
                     job.verify(plan, records, ys)
@@ -445,7 +525,13 @@ class FarmManager(ClientPolicy):
     only to idle slots; 2 lets the next job pre-stage behind the current
     one, eliminating the idle gap between assignments). ``poll_s`` is the
     control plane's results-queue poll interval — the cadence of watchdog
-    sweeps when no drains are arriving."""
+    sweeps when no drains are arriving. ``lanes`` sets the lane capacity
+    of auto-built slots: at admission, queued jobs sharing a ``lane_key``
+    (and :func:`lane_compatible` in engine/plumbing/window shape) are
+    coalesced into ONE vmap-fused run of up to that many boards per
+    dispatch stream, with per-lane verify fan-out, per-lane snapshots,
+    and lane-granular eviction (a vetoed lane requeues solo while the
+    surviving lanes keep running)."""
 
     def __init__(self, slots: Any = None, min_slots: int = 3,
                  scheduler: Optional[WindowScheduler] = None,
@@ -458,11 +544,13 @@ class FarmManager(ClientPolicy):
                  slot_queue_depth: int = 1,
                  poll_s: float = 0.02,
                  policy: Optional[FailurePolicy] = None,
+                 lanes: int = 1,
                  clock: Callable[[], float] = time.perf_counter):
         if mode not in ("lockstep", "async"):
             raise ValueError(f"unknown farm mode: {mode!r}")
         self._slots_arg = slots
         self.min_slots = min_slots
+        self.lanes = max(1, lanes)      # lane capacity for auto-built slots
         self.sched = scheduler or WindowScheduler(
             interval=1, overlap=True, drain_fn=None, stack_fn=None)
         self.wd = watchdog or Watchdog(timeout_s=600.0)
@@ -585,12 +673,14 @@ class FarmManager(ClientPolicy):
         if not self.jobs:
             return {"jobs": {}, "telemetry": self.telemetry.report()}
         if isinstance(self._slots_arg, int):
-            self.slots = enumerate_slots(min_slots=self._slots_arg)
+            self.slots = enumerate_slots(min_slots=self._slots_arg,
+                                         lane_capacity=self.lanes)
         elif self._slots_arg is not None:
             self.slots = list(self._slots_arg)
         else:
             self.slots = enumerate_slots(min_slots=min(
-                len(self.queue), max(self.min_slots, len(jax.devices()))))
+                len(self.queue), max(self.min_slots, len(jax.devices()))),
+                lane_capacity=self.lanes)
         if self.mode == "async":
             self._run_async()
         else:
@@ -753,17 +843,115 @@ class FarmManager(ClientPolicy):
                 run.evict_flag.set()
 
     def _dispatch_to_slot(self, job: FarmJob, slot: DeviceSlot):
-        job.attempts += 1
-        job.status = "running"
-        job.last_slot = slot.name
-        run = _Run(job, slot, self._next_idx, t_assigned=self.clock())
-        self._next_idx += 1
-        self._running[run.idx] = run
+        members = self._gather_lanes(job, slot)
+        run = self._new_run(members, slot, t_assigned=self.clock())
+        if {m.name for m in members} & self._force and not (
+                run.lanes is None
+                and run.job.requeues >= self._budget(run.job)):
+            # signal a pre-existing force mark at assignment, not at the
+            # next sweep: the control plane's first sweep runs after a
+            # blocking results poll, and a short job can finish entirely
+            # inside that window — the mark would never land (flaky
+            # force_evict on sub-poll_s jobs)
+            run.evict_why = "forced"
+            run.evict_flag.set()
         self._slot_load[slot.name] += 1
         self.wd.heartbeat(slot.name, gap=False)   # assigned: alive
         self.telemetry.depth(slot.name,
                              self._workers[slot.name].inbox.qsize() + 1)
         self._workers[slot.name].inbox.put(run)
+
+    # ---------------------------------------------------- lane coalescing --
+    def _gather_lanes(self, job: FarmJob, slot: DeviceSlot) -> List[FarmJob]:
+        """Pull up to ``slot.lane_capacity - 1`` queued jobs compatible
+        with ``job`` (same ``lane_key``, engine, plumbing, window shape —
+        see :func:`lane_compatible`) to ride in one fused run. Skipped
+        jobs stay queued in their original order."""
+        cap = getattr(slot, "lane_capacity", 1)
+        if cap <= 1 or job.lane_key is None or job.snapshot is not None \
+                or job.committed_outputs or callable(job.state) \
+                or callable(job.shell):
+            return [job]
+        members, skipped = [job], []
+        now = self.clock()
+        while self.queue and len(members) < cap:
+            cand = self.queue.popleft()
+            if (cand.not_before <= now
+                    and self._avoid.get(cand.name) != slot.name
+                    and lane_compatible(job, cand) is None):
+                members.append(cand)
+            else:
+                skipped.append(cand)
+        self.queue.extendleft(reversed(skipped))
+        return members
+
+    def _new_run(self, members: List[FarmJob], slot: DeviceSlot,
+                 t_assigned: float = 0.0) -> _Run:
+        if len(members) > 1:
+            run = self._make_lane_run(members, slot, t_assigned)
+        else:
+            job = members[0]
+            job.attempts += 1
+            job.status = "running"
+            job.last_slot = slot.name
+            run = _Run(job, slot, self._next_idx, t_assigned=t_assigned)
+            self._next_idx += 1
+        self.telemetry.lanes(slot.name, len(members))
+        self._running[run.idx] = run
+        return run
+
+    def _make_lane_run(self, members: List[FarmJob], slot: DeviceSlot,
+                       t_assigned: float) -> _Run:
+        """Fuse N compatible queued jobs into ONE lane-batched run: a
+        synthetic fused job (never in ``self.jobs``) carries the vmapped
+        engine, zipped windows, and lane-packed state/shell. Member
+        state/shell objects are packed DIRECTLY (no replay copies — the
+        fused engine never donates), so a weight tree shared by identity
+        across members stays one device copy."""
+        lb = LaneBatch(members[0].engine,
+                       windows=[m.windows for m in members],
+                       states=[m.state for m in members],
+                       shells=[m.shell for m in members],
+                       stack_fn=members[0].stack_fn,
+                       drain_fn=members[0].drain_fn,
+                       reset=members[0].reset)
+        fused = FarmJob(
+            name="lanes[" + "+".join(m.name for m in members) + "]",
+            engine=lb.engine, windows=lb.windows, state=lb.state,
+            shell=lb.shell, drain_fn=lb.drain_fn, stack_fn=lb.stack_fn,
+            reset=lb.reset, max_requeues=0)
+        run = _Run(fused, slot, self._next_idx, t_assigned=t_assigned)
+        self._next_idx += 1
+        run.lanes = list(members)
+        run.lane_batch = lb
+        run.lane_outputs = [[] for _ in members]
+        fused.barriers = self._lane_barriers(run, members[0].barriers)
+        for m in members:
+            m.attempts += 1
+            m.status = "running"
+            m.last_slot = slot.name
+            self._avoid.pop(m.name, None)
+        return run
+
+    def _lane_barriers(self, run: _Run, proto) -> tuple:
+        """Fan a fused run's barrier commits out to its live members: each
+        member's own barrier action fires with its lane's state slice, so
+        per-job checkpoint saves keep their solo semantics. Vetoed lanes
+        are skipped — a lane veto vetoes THAT lane's commit only."""
+        def fan(j):
+            def act(state, boundary):
+                # one host fetch of the stacked leaves, N numpy views —
+                # not N device gathers (shared weights stay on device)
+                host = run.lane_batch.fetch_state(state)
+                for k, m in enumerate(run.lanes):
+                    if k in run.lane_faults or k in run.lane_detached:
+                        continue
+                    m.barriers[j].action(
+                        run.lane_batch.slice_state(host, k), boundary)
+            return act
+
+        return tuple(DrainBarrier(every=b.every, action=fan(j))
+                     for j, b in enumerate(proto))
 
     def _handle_async(self, msg):
         if msg[0] == "canary":
@@ -777,6 +965,13 @@ class FarmManager(ClientPolicy):
             _, _, plan, records, ys = msg
             run.outputs.append((plan, records, ys))
             return
+        if kind == "lane_drain":
+            _, _, plan, delivered, faulted = msg
+            for lane, rec, y in delivered:
+                run.lane_outputs[lane].append((plan, rec, y))
+            for lane, exc in faulted:
+                self._detach_lane(run, lane, f"lane veto: {exc}")
+            return
         run.closed = True
         self._running.pop(run.idx, None)
         self._slot_load[run.slot.name] -= 1
@@ -784,8 +979,11 @@ class FarmManager(ClientPolicy):
             self._slot_result(run.slot.name, ok=run.fault is None)
             self._finish_run(run, msg[2], msg[3])
         elif kind == "fault":
-            self._slot_result(run.slot.name, ok=False,
-                              why=f"veto: {run.fault}")
+            if run.lanes is None:
+                # a lane veto is a job-content fault localized by the
+                # fused verify, not a slot failure — don't score the seat
+                self._slot_result(run.slot.name, ok=False,
+                                  why=f"veto: {run.fault}")
             self._requeue_or_fail(run, f"drain veto: {run.fault}")
         elif kind == "evicted":
             if run.evict_why == "shutdown":
@@ -815,15 +1013,19 @@ class FarmManager(ClientPolicy):
                 if run.slot.name in slow:
                     marks.setdefault(idx, "straggler")
         for idx, run in self._running.items():
-            if run.job.name in self._force:
+            names = {run.job.name}
+            if run.lanes is not None:   # force-marking a member cuts the
+                names.update(m.name for m in run.lanes)  # whole fused run
+            if names & self._force:
                 marks.setdefault(idx, "forced")
         for idx, why in marks.items():
             run = self._running[idx]
             if run.evict_flag.is_set():
                 continue                # already signalled
-            if (run.fault is None
+            if (run.lanes is None and run.fault is None
                     and run.job.requeues >= self._budget(run.job)):
                 continue                # budget spent: let it limp home
+                # (lane runs skip the gate: members budget at requeue)
             run.evict_why = why
             run.evict_flag.set()
         dead = set(self.wd.dead_workers())
@@ -876,6 +1078,33 @@ class FarmManager(ClientPolicy):
         the run is what the control plane reads at requeue time."""
         job = run.job
         self._inject("snapshot.publish", job=job.name, slot=run.slot.name)
+        if run.lanes is not None:
+            # per-lane publish: each live member's OWN store gets its lane
+            # slice + its own verifier position, so a detached lane's solo
+            # requeue resumes through the unchanged checkpointed path
+            cursor = {"step": np.int64(plan.boundary),
+                      "window": np.int64(plan.index + 1)}
+            host_state = run.lane_batch.fetch_state(state)
+            host_shell = run.lane_batch.fetch_shell(shell)
+            for lane, m in enumerate(run.lanes):
+                if lane in run.lane_faults or lane in run.lane_detached:
+                    continue
+                vsnap = (m.verify.snapshot()
+                         if hasattr(m.verify, "snapshot") else {})
+                tree = {"state": run.lane_batch.slice_state(host_state,
+                                                            lane),
+                        "shell": run.lane_batch.slice_shell(host_shell,
+                                                            lane),
+                        "verify": vsnap, "cursor": dict(cursor)}
+                if m.snapshot_store is None:
+                    m.snapshot_store = MemorySnapshotStore(keep=2)
+                m.snapshot_store.save(tree, step=plan.boundary)
+                m._snap_like = jax.tree.map(lambda _: 0, tree)
+                m.snapshot = JobSnapshot(step=plan.boundary,
+                                         window=plan.index + 1)
+            run.snapshot = JobSnapshot(step=plan.boundary,
+                                       window=plan.index + 1)
+            return
         vsnap = (job.verify.snapshot()
                  if hasattr(job.verify, "snapshot") else {})
         tree = {"state": state, "shell": shell, "verify": vsnap,
@@ -938,6 +1167,19 @@ class FarmManager(ClientPolicy):
         ids, so tail windows, barrier cadence, and the on_drain order are
         exactly an uninterrupted run's."""
         job = run.job
+        if run.lanes is not None:
+            # fused runs always start fresh (coalescing rejects mid-stream
+            # resumes) and their engine never donates, so the packed trees
+            # are pinned WITHOUT replay copies: broadcast (identity-shared)
+            # leaves stay one device copy across all lanes
+            run.start_window = 0
+            return Client(engine=job.engine, windows=job._window_iter(),
+                          state=place(job.state, slot),
+                          shell=place(job.shell, slot),
+                          drain_fn=job.drain_fn, stack_fn=job.stack_fn,
+                          reset=job.reset,
+                          barriers=self._gated_barriers(run),
+                          lanes=run.lane_count)
         snap = job.snapshot
         tree = None
         if snap is not None:
@@ -1008,6 +1250,9 @@ class FarmManager(ClientPolicy):
                      for b in run.job.barriers)
 
     def _finish_run(self, run: _Run, state, shell):
+        if run.lanes is not None:
+            self._finish_lanes(run, state, shell)
+            return
         job = run.job
         self._force.discard(job.name)   # a stale mark must not outlive us
         job.status = "done"
@@ -1021,6 +1266,142 @@ class FarmManager(ClientPolicy):
         if job.on_drain is not None:
             for plan, records, ys in outputs:       # exactly-once, in order
                 job.on_drain(plan, records, ys)
+
+    # ------------------------------------------------------ lane lifecycle --
+    def _lane_ingest(self, run: _Run, plan, records, ys):
+        """Fan one fused window out to its live lanes and run each
+        member's verify against ITS slice (called on the thread that owns
+        the drain: the slot thread in async mode, the control thread in
+        lockstep). A verify exception vetoes that lane alone: it is
+        recorded in ``run.lane_faults`` (so later commits on this run skip
+        the lane), stamped with the lane id, and the lane's window is not
+        delivered. Returns ``(delivered, faulted)`` as
+        ``[(lane, records, ys)...]`` / ``[(lane, exc)...]``."""
+        delivered, faulted = [], []
+        # ys leaves are all lane-stacked (vmap out_axes=0): ONE host fetch
+        # for the window, then per-lane numpy views — N device gathers per
+        # window would cost what the fused dispatch saved
+        host_ys = jax.device_get(ys)
+        for lane, m in enumerate(run.lanes):
+            if lane in run.lane_faults:
+                continue
+            rec, y = run.lane_batch.fan_out_one(records, host_ys, lane)
+            if m.verify is not None:
+                try:
+                    m.verify(plan, rec, y)
+                except Exception as e:  # noqa: BLE001 — veto, not crash
+                    if getattr(e, "lane", None) is None:
+                        try:
+                            e.lane = lane       # divergence names the lane
+                        except Exception:       # noqa: BLE001 — slotted
+                            pass                # exceptions: telemetry has it
+                    run.lane_faults[lane] = e
+                    self.telemetry.veto(run.slot.name)
+                    self.telemetry.lane_veto(run.slot.name, m.name, lane)
+                    faulted.append((lane, e))
+                    continue
+            delivered.append((lane, rec, y))
+        return delivered, faulted
+
+    def _adopt_lane(self, run: _Run, lane: int) -> int:
+        """Adopt lane ``lane``'s committed prefix into its member job
+        (the per-lane analog of :meth:`_adopt_progress`, same hung-hand-off
+        guard: a snapshot whose windows never reached the control plane is
+        dropped, not trusted). Returns the resume cursor window."""
+        m = run.lanes[lane]
+        outs = run.lane_outputs[lane]
+        snap = m.snapshot
+        if snap is not None and snap.window <= len(outs):
+            m.committed_outputs.extend(outs[:snap.window])
+            return snap.window
+        if snap is not None:
+            m.snapshot = None
+        return 0
+
+    def _detach_lane(self, run: _Run, lane: int, why: str):
+        """Lane-granular eviction: mask the vetoed lane out of the (still
+        running) fused run and requeue its member as a SOLO job resuming
+        from its own last accepted per-lane snapshot. Idempotent — the
+        control plane may see the same lane fault from several paths."""
+        if lane in run.lane_detached:
+            return
+        run.lane_detached.add(lane)
+        run.lane_faults.setdefault(lane, None)
+        m = run.lanes[lane]
+        cursor = self._adopt_lane(run, lane)
+        # the vetoed window itself re-runs on the solo attempt too
+        m.windows_replayed += max(
+            0, len(run.lane_outputs[lane]) - cursor) + 1
+        self.telemetry.eviction(run.slot.name, m.name, why)
+        self._requeue_member(m, run.slot.name, why)
+
+    def _retire_lanes(self, run: _Run, why: str, interrupted: bool = False):
+        """A fused run finished badly (crash, forced eviction, hung slot,
+        every lane vetoed, shutdown): detach its vetoed lanes and requeue
+        (or mark interrupted) the survivors from their committed
+        prefixes."""
+        self.wd.forget(run.slot.name)
+        self.telemetry.eviction(run.slot.name, run.job.name, why)
+        for lane, m in enumerate(run.lanes):
+            if lane in run.lane_detached:
+                continue
+            if not interrupted and lane in run.lane_faults:
+                self._detach_lane(run, lane,
+                                  f"lane veto: {run.lane_faults[lane]}")
+                continue
+            run.lane_detached.add(lane)
+            cursor = self._adopt_lane(run, lane)
+            m.windows_replayed += max(
+                0, len(run.lane_outputs[lane]) - cursor)
+            if interrupted:
+                m.status = "interrupted"
+            else:
+                self._requeue_member(m, run.slot.name, why)
+
+    def _requeue_member(self, job: FarmJob, slot_name: str, why: str):
+        """The requeue/quarantine/fail tail shared by solo attempts and
+        detached lane members (budget, backoff gate, avoid preference)."""
+        self._force.discard(job.name)
+        if job.requeues < self._budget(job):
+            job.requeues += 1
+            backoff = (self.policy.backoff_for(job.requeues)
+                       if self.policy is not None else 0.0)
+            if backoff > 0:
+                job.not_before = self.clock() + backoff
+            self.telemetry.retry(job.name, job.requeues, backoff, why)
+            job.status = "queued"
+            self._avoid[job.name] = slot_name
+            self.queue.appendleft(job)
+        elif self.policy is not None and self.policy.quarantine:
+            job.status = "quarantined"
+            job.error = why
+            self.telemetry.quarantine(job.name, why)
+        else:
+            job.status = "failed"
+            job.error = why
+
+    def _finish_lanes(self, run: _Run, state, shell):
+        """Fused-run completion: every surviving lane delivers its full
+        stream (committed prefix + this run's windows) exactly once and in
+        order; lanes vetoed on the FINAL window detach here."""
+        lb = run.lane_batch
+        for lane, m in enumerate(run.lanes):
+            if lane in run.lane_detached:
+                continue
+            if lane in run.lane_faults:
+                self._detach_lane(run, lane,
+                                  f"lane veto: {run.lane_faults[lane]}")
+                continue
+            self._force.discard(m.name)
+            m.status = "done"
+            outputs = m.committed_outputs + run.lane_outputs[lane]
+            m.windows_drained = len(outputs)
+            self.results[m.name] = (lb.slice_state(state, lane),
+                                    lb.slice_shell(shell, lane))
+            self.outputs[m.name] = outputs
+            if m.on_drain is not None:
+                for plan, records, ys in outputs:
+                    m.on_drain(plan, records, ys)
 
     # ----------------------------------------------- ClientPolicy protocol --
     def admit(self, round_idx: int):
@@ -1092,8 +1473,9 @@ class FarmManager(ClientPolicy):
         run = self._running.pop(k)
         self._free.append(run.slot)
         if run.fault is not None:
-            self._slot_result(run.slot.name, ok=False,
-                              why=f"veto: {run.fault}")
+            if run.lanes is None:       # lane vetoes don't score the seat
+                self._slot_result(run.slot.name, ok=False,
+                                  why=f"veto: {run.fault}")
             self._requeue_or_fail(run, f"drain veto: {run.fault}")
             return
         self._slot_result(run.slot.name, ok=True)
@@ -1123,8 +1505,9 @@ class FarmManager(ClientPolicy):
         cost = self.clock() - self._pre.pop(k, self.clock())
         if plan.index > 0:
             # window 0 of an attempt pays jit compilation (the farm analog
-            # of bitstream build time) — a known one-off, not slowness
-            self.wd.observe(run.slot.name, cost)
+            # of bitstream build time) — a known one-off, not slowness; a
+            # lane-batched window is N boards of work, normalized per board
+            self.wd.observe(run.slot.name, cost, lanes=run.lane_count)
         self.telemetry.dispatch(run.slot.name, self._key(run, plan), cost)
         if run.job.capture is not None:
             run.job.capture.on_dispatch(plan, state)
@@ -1135,6 +1518,15 @@ class FarmManager(ClientPolicy):
         self.telemetry.drain(run.slot.name, self._key(run, plan))
         if run.job.capture is not None:
             run.job.capture.on_drain(plan, records, ys)
+        if run.lanes is not None:
+            delivered, faulted = self._lane_ingest(run, plan, records, ys)
+            for lane, rec, y in delivered:
+                run.lane_outputs[lane].append((plan, rec, y))
+            for lane, exc in faulted:
+                self._detach_lane(run, lane, f"lane veto: {exc}")
+            if faulted and len(run.lane_faults) == len(run.lanes):
+                run.fault = faulted[-1][1]          # every lane dead
+            return
         if run.job.verify is not None and run.fault is None:
             try:
                 run.job.verify(plan, records, ys)
@@ -1210,18 +1602,16 @@ class FarmManager(ClientPolicy):
         """A shutdown-cut attempt: adopt its committed progress (snapshot
         + delivered prefix — a restarted farm resumes from there) and mark
         the job ``interrupted`` instead of requeueing."""
+        if run.lanes is not None:
+            self._retire_lanes(run, "shutdown", interrupted=True)
+            return
         self._adopt_progress(run)
         self.wd.forget(run.slot.name)
         run.job.status = "interrupted"
 
     def _admit_one(self, job: FarmJob, slot: DeviceSlot) -> Client:
-        job.attempts += 1
-        job.status = "running"
-        job.last_slot = slot.name
-        k = self._next_idx
-        self._next_idx += 1
-        run = _Run(job, slot, k)
-        self._running[k] = run
+        members = self._gather_lanes(job, slot)
+        run = self._new_run(members, slot)
         self.wd.heartbeat(slot.name, gap=False)
         return self._client_for(run, slot)
 
@@ -1236,19 +1626,23 @@ class FarmManager(ClientPolicy):
                 if run.slot.name in slow:
                     marks.setdefault(k, "straggler")
         for k, run in self._running.items():
-            if run.job.name in self._force:
+            names = {run.job.name}
+            if run.lanes is not None:   # force-marking a member cuts the
+                names.update(m.name for m in run.lanes)  # whole fused run
+            if names & self._force:
                 marks.setdefault(k, "forced")
             if run.fault is not None:
                 marks.setdefault(k, f"drain veto: {run.fault}")
         for k, why in marks.items():
             run = self._running[k]
-            if (run.fault is None
+            if (run.lanes is None and run.fault is None
                     and run.job.requeues >= self._budget(run.job)):
                 continue                # budget spent: let it limp home
+                # (lane runs skip the gate: members budget at requeue)
             self._evicted.add(k)
             self._running.pop(k)
             self._free.append(run.slot)
-            if run.fault is not None:
+            if run.fault is not None and run.lanes is None:
                 self._slot_result(run.slot.name, ok=False,
                                   why=f"veto: {run.fault}")
             self._requeue_or_fail(run, why)
@@ -1277,6 +1671,9 @@ class FarmManager(ClientPolicy):
         not judged against the evicted job's, drop any stale force mark,
         then requeue (with the policy's backoff gate), quarantine, or fail
         on budget."""
+        if run.lanes is not None:
+            self._retire_lanes(run, why)
+            return
         job = run.job
         cursor = self._adopt_progress(run)
         # work lost to the eviction: drained-but-uncommitted windows that
@@ -1285,26 +1682,7 @@ class FarmManager(ClientPolicy):
         job.windows_replayed += max(
             0, run.start_window + len(run.outputs) - cursor)
         self.wd.forget(run.slot.name)
-        self._force.discard(job.name)
         self.telemetry.eviction(run.slot.name, job.name, why)
         if job.capture is not None:
             job.capture.reset(upto=cursor)  # committed rows stay
-        if job.requeues < self._budget(job):
-            job.requeues += 1
-            backoff = (self.policy.backoff_for(job.requeues)
-                       if self.policy is not None else 0.0)
-            if backoff > 0:
-                job.not_before = self.clock() + backoff
-            self.telemetry.retry(job.name, job.requeues, backoff, why)
-            job.status = "queued"
-            self._avoid[job.name] = run.slot.name
-            self.queue.appendleft(job)      # uncommitted outputs discarded
-        elif self.policy is not None and self.policy.quarantine:
-            # budget exhausted under a quarantine policy: dead-letter the
-            # job — the farm completes the rest and REPORTS it
-            job.status = "quarantined"
-            job.error = why
-            self.telemetry.quarantine(job.name, why)
-        else:
-            job.status = "failed"
-            job.error = why
+        self._requeue_member(job, run.slot.name, why)

@@ -26,14 +26,18 @@ import jax
 class DeviceSlot:
     """One farm seat: ``name`` is the watchdog/telemetry worker key
     (``cpu:0``, or ``cpu:0#2`` for the third virtual seat of a shared
-    device); ``device`` is the backing ``jax.Device``."""
+    device); ``device`` is the backing ``jax.Device``; ``lane_capacity``
+    is how many identical-arch boards the seat will fuse into one
+    lane-batched dispatch stream (1 = solo boards only)."""
     name: str
     device: Any
     index: int
+    lane_capacity: int = 1
 
 
 def enumerate_slots(min_slots: int = 1,
-                    devices: Optional[Sequence] = None) -> List[DeviceSlot]:
+                    devices: Optional[Sequence] = None,
+                    lane_capacity: int = 1) -> List[DeviceSlot]:
     """One slot per available device; when the host has fewer devices than
     ``min_slots`` (single-device CPU CI), extra virtual slots round-robin
     over the real devices so every farm code path still runs."""
@@ -46,7 +50,8 @@ def enumerate_slots(min_slots: int = 1,
         d = devices[i % len(devices)]
         base = f"{getattr(d, 'platform', 'dev')}:{getattr(d, 'id', i)}"
         name = base if n <= len(devices) else f"{base}#{i // len(devices)}"
-        slots.append(DeviceSlot(name=name, device=d, index=i))
+        slots.append(DeviceSlot(name=name, device=d, index=i,
+                                lane_capacity=max(1, lane_capacity)))
     return slots
 
 

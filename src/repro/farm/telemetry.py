@@ -87,6 +87,9 @@ class FarmTelemetry:
         self.queue_depth = defaultdict(list)    # slot -> depth at assignment
         self.windows = defaultdict(int)         # slot -> drained windows
         self.vetoes = defaultdict(int)          # slot -> drain vetoes
+        # ----- lane channels (lane-batched many-DUT dispatch) -----
+        self.lanes_per_dispatch = defaultdict(list)  # slot -> lanes/assignment
+        self.lane_vetoes = _BoundedLog(max_events)   # {slot, job, lane}
         self.evictions = _BoundedLog(max_events)    # {slot, job, why}
         self.resumes = _BoundedLog(max_events)  # snapshot-resumed requeues
         self.occupancy_samples = _BoundedLog(max_events)
@@ -136,6 +139,21 @@ class FarmTelemetry:
     def veto(self, slot: str):
         with self._lock:
             self.vetoes[slot] += 1
+
+    def lanes(self, slot: str, n: int):
+        """One assignment started on ``slot`` carrying ``n`` boards
+        (1 = solo; >1 = a lane-batched fused run). Sampled at every
+        assignment, so the mean is true lanes-per-dispatch occupancy."""
+        with self._lock:
+            self.lanes_per_dispatch[slot].append(int(n))
+
+    def lane_veto(self, slot: str, job: str, lane: int):
+        """A verifier vetoed ONE lane of a lane-batched run: lane ``lane``
+        (board ``job``) is masked out and requeued solo while the
+        surviving lanes keep running."""
+        with self._lock:
+            self.lane_vetoes.append({"slot": slot, "job": job,
+                                     "lane": int(lane)})
 
     def eviction(self, slot: str, job: str, why: str):
         with self._lock:
@@ -201,11 +219,14 @@ class FarmTelemetry:
     # ------------------------------------------------------------ report --
     def report(self) -> dict:
         with self._lock:
-            slots = sorted(set(self.windows) | set(self.dispatch_ms))
+            slots = sorted(set(self.windows) | set(self.dispatch_ms)
+                           | set(self.lanes_per_dispatch))
             devices = {}
             for slot in slots:
+                lanes = self.lanes_per_dispatch.get(slot, [])
                 devices[slot] = {
                     "windows": self.windows.get(slot, 0),
+                    "lanes_per_dispatch": _stats([float(x) for x in lanes]),
                     "window_ms": _stats(self.window_ms.get(slot, [])),
                     "dispatch_ms": _stats(self.dispatch_ms.get(slot, [])),
                     "drain_ms": _stats(self.drain_wall_ms.get(slot, [])),
@@ -217,6 +238,9 @@ class FarmTelemetry:
                     "drain_vetoes": self.vetoes.get(slot, 0),
                 }
             occ = list(self.occupancy_samples)
+            lane_vetoes = [dict(v) for v in self.lane_vetoes]
+            all_lanes = [x for xs in self.lanes_per_dispatch.values()
+                         for x in xs]
             evs = list(self.evictions)
             resumes = [dict(r) for r in self.resumes]
             vetoes = sum(self.vetoes.values())
@@ -228,6 +252,7 @@ class FarmTelemetry:
             trips = dict(self.breaker_trips)
             dropped = {name: log.dropped for name, log in (
                 ("evictions", self.evictions),
+                ("lane_vetoes", self.lane_vetoes),
                 ("resumes", self.resumes),
                 ("occupancy", self.occupancy_samples),
                 ("retries", self.retries),
@@ -242,6 +267,10 @@ class FarmTelemetry:
             "occupancy_peak": max((a for a, _ in occ), default=0),
             "slots": max((t for _, t in occ), default=0),
             "drain_vetoes": vetoes,
+            "lane_vetoes": lane_vetoes,
+            "lanes_per_dispatch_mean": (sum(all_lanes) / len(all_lanes)
+                                        if all_lanes else 0.0),
+            "lanes_per_dispatch_max": max(all_lanes, default=0),
             "evictions": [{"slot": s, "job": j, "why": w}
                           for s, j, w in evs],
             "resumes": resumes,
@@ -262,6 +291,11 @@ class FarmTelemetry:
                  f"{r['drain_vetoes']} drain vetoes, "
                  f"{len(r['evictions'])} evictions, "
                  f"{len(r['resumes'])} snapshot resumes"]
+        if r["lanes_per_dispatch_max"] > 1:
+            lines.append(
+                f"  lanes: {r['lanes_per_dispatch_mean']:.1f}/dispatch "
+                f"mean, {r['lanes_per_dispatch_max']} max, "
+                f"{len(r['lane_vetoes'])} lane vetoes")
         policy = []
         if r["retries"]:
             policy.append(f"{len(r['retries'])} retries")

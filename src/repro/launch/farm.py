@@ -52,6 +52,17 @@ the oracle, and the poisoned board was dead-lettered, not raised:
   PYTHONPATH=src python -m repro.launch.farm --chaos 7
   PYTHONPATH=src python -m repro.launch.farm --chaos 7 --lockstep
 
+``--lanes N`` is the lane-batched-boards gate (CI ``farm-lanes-smoke``):
+N identical-arch boards sharing one weight tree must coalesce into ONE
+vmap-ed dispatch stream (one ClientDriver drives all N) and deliver
+outputs bit-identical to the same boards run solo. ``--chaos-lane``
+additionally fails one board's verify mid-stream: the farm must evict
+exactly that lane (requeued solo, resuming from its per-lane barrier
+snapshot) while the surviving lanes keep running:
+
+  PYTHONPATH=src python -m repro.launch.farm --lanes 8 --chaos-lane
+  PYTHONPATH=src python -m repro.launch.farm --lanes 8 --lockstep
+
 SIGINT (^C) during a farm run is a GRACEFUL stop: every board is cut at
 its next drain boundary, committed prefixes and published snapshots are
 kept, the partial report + telemetry summary are printed, and the
@@ -414,6 +425,137 @@ def run_chaos_smoke(seed: int, mode: str = "async", slots: int = 4,
     }
 
 
+@jax.jit
+def _lane_body(state, stack):
+    def step(s, x):
+        y = jnp.tanh(x @ s["w"]) + s["bias"]
+        return ({"bias": s["bias"] + 0.01 * jnp.sum(y), "w": s["w"]},
+                jnp.sum(y, axis=-1))
+    return jax.lax.scan(step, state, stack)
+
+
+def _lane_engine(state, shell, stack):
+    s, ys = _lane_body(state, stack)
+    return s, shell, ys
+
+
+def _lane_stack(items):
+    # ONE shared function: lane coalescing requires the same stack_fn
+    # OBJECT across members (per-board lambdas would defeat it)
+    return jnp.asarray(np.stack(items))
+
+
+def _submit_lane_boards(mgr, w, n_boards: int, n_steps: int, group: int,
+                        chaos_lane: bool, lane_key):
+    """``n_boards`` identical-arch boards over ONE shared weight ``w``
+    (per-board state differs only in seed-derived inputs and bias — the
+    lane packer must broadcast ``w`` as a single device copy). With
+    ``chaos_lane`` the last board's verify raises ONCE mid-stream: in a
+    lane-batched run that is a lane veto — only that lane may be detached
+    and requeued solo; every other lane keeps running."""
+    outs = {}
+    marked = {"done": False}
+    for i in range(n_boards):
+        name = f"lane-board{i}"
+        outs[name] = []
+        rng = np.random.RandomState(100 + i)
+        items = [rng.randn(4, 8).astype(np.float32)
+                 for _ in range(n_steps)]
+        verify = None
+        if chaos_lane and i == n_boards - 1:
+            def verify(plan, records, ys):
+                if plan.index == 3 and not marked["done"]:
+                    marked["done"] = True
+                    raise RuntimeError("chaos lane: injected veto")
+        mgr.submit(FarmJob(
+            name=name, engine=_lane_engine,
+            windows=[items[k:k + group]
+                     for k in range(0, n_steps, group)],
+            state={"bias": jnp.float32(i) * 0.5, "w": w}, shell={},
+            stack_fn=_lane_stack,
+            on_drain=lambda p, r, y, n=name: outs[n].append(
+                np.asarray(y)),
+            barriers=(DrainBarrier(every=1, action=lambda s, b: None),),
+            verify=verify, lane_key=lane_key, max_requeues=2))
+    return outs
+
+
+def run_lanes_smoke(lanes: int = 8, chaos_lane: bool = False,
+                    mode: str = "async", slots: int = 2,
+                    n_steps: int = 12, group: int = 2) -> dict:
+    """The ``farm-lanes-smoke`` gate: ``lanes`` identical-arch boards must
+    coalesce into one vmap-ed dispatch stream and stay bit-identical to
+    the same boards run solo (the oracle). With ``--chaos-lane`` one
+    board's verify raises mid-stream: the farm must evict EXACTLY that
+    lane (one lane veto, one requeue, snapshot resume), keep the other
+    lanes running, and still deliver every board bit-identical."""
+    w = jnp.asarray(np.random.RandomState(0).randn(8, 8)
+                    .astype(np.float32))
+    n_windows = (n_steps + group - 1) // group
+
+    # solo oracle: same boards, no lane coalescing, no chaos
+    mgr0 = FarmManager(slots=slots, mode=mode, evict_stragglers=False)
+    oracle = _submit_lane_boards(mgr0, w, lanes, n_steps, group,
+                                 chaos_lane=False, lane_key=None)
+    mgr0.run()
+
+    mgr = FarmManager(slots=slots, mode=mode, evict_stragglers=False,
+                      lanes=lanes)
+    outs = _submit_lane_boards(mgr, w, lanes, n_steps, group,
+                               chaos_lane=chaos_lane,
+                               lane_key="lanes-smoke")
+    report = mgr.run(strict=False)
+    tel = report["telemetry"]
+
+    problems = []
+    for name in oracle:
+        same = (len(outs[name]) == len(oracle[name])
+                and all(np.array_equal(a, b)
+                        for a, b in zip(outs[name], oracle[name])))
+        if not same:
+            problems.append(f"{name}: outputs diverged from solo oracle")
+    if any(j["status"] != "done" for j in report["jobs"].values()):
+        problems.append("not every board finished done")
+    if tel.get("lanes_per_dispatch_max", 1) < lanes:
+        problems.append(
+            f"boards did not coalesce: lanes_per_dispatch_max="
+            f"{tel.get('lanes_per_dispatch_max')} < {lanes}")
+    chaos_name = f"lane-board{lanes - 1}"
+    if chaos_lane:
+        vetoes = tel.get("lane_vetoes", [])
+        if len(vetoes) != 1 or vetoes[0]["job"] != chaos_name:
+            problems.append(f"expected exactly one lane veto on "
+                            f"{chaos_name}, got {vetoes}")
+        j = report["jobs"][chaos_name]
+        if j["requeues"] != 1:
+            problems.append(f"chaos lane requeues={j['requeues']}, "
+                            f"expected 1")
+        others = [report["jobs"][n]["requeues"] for n in outs
+                  if n != chaos_name]
+        if any(others):
+            problems.append(f"surviving lanes were requeued: {others}")
+        if not (0 < j["windows_committed"]
+                and j["windows_replayed"] < n_windows):
+            problems.append(
+                f"chaos lane replayed the full stream "
+                f"(committed={j['windows_committed']}, "
+                f"replayed={j['windows_replayed']}) — snapshot resume "
+                f"did not carry over")
+    elif tel.get("lane_vetoes"):
+        problems.append(f"unexpected lane vetoes: {tel['lane_vetoes']}")
+
+    return {
+        "mode": mode,
+        "lanes": lanes,
+        "chaos_lane": chaos_lane,
+        "jobs": report["jobs"],
+        "lanes_per_dispatch_max": tel.get("lanes_per_dispatch_max"),
+        "lane_vetoes": tel.get("lane_vetoes", []),
+        "problems": problems,
+        "ok": not problems,
+    }
+
+
 def run_farm(arch: str, steps: int, slots, interval: int = 2,
              synthetic_straggler: bool = False, straggler_factor: float = 6.0,
              roofline: bool = False, seed: int = 0,
@@ -534,6 +676,15 @@ def main():
                          "eviction must resume from the last accepted "
                          "barrier snapshot (replayed < committed) with "
                          "bit-identical outputs")
+    ap.add_argument("--lanes", type=int, metavar="N", default=None,
+                    help="lane-batched boards gate: N identical-arch "
+                         "boards must coalesce into one vmap-ed dispatch "
+                         "stream bit-identical to solo runs")
+    ap.add_argument("--chaos-lane", action="store_true",
+                    help="with --lanes: one board's verify raises "
+                         "mid-stream; exactly that lane must be evicted "
+                         "and requeued solo while the others keep "
+                         "running bit-identically")
     ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
                     help="fault-recovery gate: inject a seeded fault "
                          "schedule; exit non-zero unless every fault was "
@@ -551,6 +702,15 @@ def main():
 
     if args.restart_smoke:
         out = run_restart_smoke(mode=args.mode, slots=args.slots)
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
+
+    if args.lanes is not None:
+        out = run_lanes_smoke(lanes=args.lanes,
+                              chaos_lane=args.chaos_lane,
+                              mode=args.mode)
         print(json.dumps(out, indent=1, default=float))
         if not out["ok"]:
             sys.exit(1)
