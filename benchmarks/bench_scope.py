@@ -1,0 +1,110 @@
+"""ZP-Scope overhead: the same window streams through the WindowScheduler
+with the instrumentation plane off vs on at the default farm read rate
+(``every_n_windows=8``, default ``fuse=False`` spec). Two regimes:
+
+  board  — a board-sized window (batched matmul scan, ~ms of device work
+           per dispatch, the shape of the farm's model boards). The
+           ``scope_overhead`` row is the acceptance number: <=3% windows/s
+           with the plane on.
+  floor  — a dispatch-bound stream (matvec windows of ~100us: the
+           windows/s ceiling IS the host loop). Here the plane's fixed
+           per-window cost (the counter dispatch plus the amortized
+           read-rate sample) cannot hide behind device compute, so the
+           ``scope_floor`` row records the worst-case absolute cost in
+           us/window — the number to weigh against a board's window time
+           when picking a read rate (the sample cost amortizes as
+           1/every_n_windows; the update cost is per-window by design,
+           since per-window digests are what the commit verifier keys on).
+
+Planes are built once and reused across rounds so the numbers are
+steady-state, not compile time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.schedule import WindowScheduler
+from repro.core.scope import ScopePlane, ScopeSpec
+
+EVERY_N = 8                 # the read rate under test (farm default)
+DIM = 256
+W = jax.random.normal(jax.random.key(0), (DIM, DIM)) * 0.05
+
+BOARD_B, BOARD_GROUP, BOARD_NW = 256, 16, 64
+FLOOR_GROUP, FLOOR_NW = 8, 256
+
+
+@jax.jit
+def _board_engine(state, shell, idx_stack):
+    # ys is one scalar metric per step (a loss), the shape real boards
+    # emit — the counter folds scale with ys size, not window compute
+    def body(x, idx):
+        x = jnp.tanh(x @ W + idx.astype(jnp.float32) * 1e-3)
+        return x, jnp.mean(jnp.abs(x))
+    x, ys = jax.lax.scan(body, state, idx_stack)
+    return x, shell, ys
+
+
+@jax.jit
+def _floor_engine(state, shell, idx_stack):
+    def body(x, idx):
+        x = jnp.tanh(x @ W + idx.astype(jnp.float32) * 1e-3)
+        return x, jnp.mean(jnp.abs(x))
+    x, ys = jax.lax.scan(body, state, idx_stack)
+    return x, shell, ys
+
+
+def _run(engine, state0, group, n_windows, plane):
+    sched = WindowScheduler(interval=group, overlap=True, drain_fn=None,
+                            reset=None)
+    state, _, _ = sched.run(
+        engine, sched.windows(jnp.arange(n_windows * group,
+                                         dtype=jnp.int32)),
+        state0, {}, scope=plane)
+    return state.block_until_ready()
+
+
+def _ab(engine, state0, group, n_windows, rounds=9):
+    """Best-of-rounds s/window for the plane-off and plane-on arms,
+    interleaved. Interleaving because this shared CPU drifts enough
+    between measurement blocks to swing a back-to-back comparison either
+    way; min (not median) because co-tenant interference only ever ADDS
+    time, so each arm's fastest round is its least-polluted one."""
+    plane = ScopePlane(ScopeSpec(every_n_windows=EVERY_N))
+    for p in (None, plane):
+        _run(engine, state0, group, n_windows, p)    # compile
+    off, on = [], []
+    for _ in range(rounds):
+        for arm, sink in ((None, off), (plane, on)):
+            t0 = time.perf_counter()
+            _run(engine, state0, group, n_windows, arm)
+            sink.append(time.perf_counter() - t0)
+    return min(off) / n_windows, min(on) / n_windows
+
+
+def main():
+    s_off, s_on = _ab(_board_engine, jnp.ones((BOARD_B, DIM), jnp.float32),
+                      BOARD_GROUP, BOARD_NW)
+    emit("scope_off_window", s_off * 1e6,
+         f"board-sized window ({BOARD_B}x{DIM} scan x {BOARD_GROUP} "
+         f"steps), {1 / s_off:.0f} windows/s")
+    emit("scope_overhead", (s_on - s_off) * 1e6,
+         f"{(s_on / s_off - 1) * 100:+.1f}% windows/s at "
+         f"every_n_windows={EVERY_N} (acceptance <=3%)")
+
+    f_off, f_on = _ab(_floor_engine, jnp.ones((DIM,), jnp.float32),
+                      FLOOR_GROUP, FLOOR_NW)
+    emit("scope_floor_window", f_off * 1e6,
+         f"dispatch-bound window (matvec x {FLOOR_GROUP} steps), "
+         f"{1 / f_off:.0f} windows/s")
+    emit("scope_floor", (f_on - f_off) * 1e6,
+         f"{(f_on / f_off - 1) * 100:+.1f}% on ~{f_off * 1e6:.0f}us "
+         f"windows — the plane's fixed per-window cost, worst case by "
+         f"construction")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.bench_coemu",         # §IV-A    — verify throughput
     "benchmarks.bench_farm",          # ZP-Farm  — farm-vs-serial boards
     "benchmarks.bench_lanes",         # ZP-Farm  — lane-batched boards
+    "benchmarks.bench_scope",         # ZP-Scope — instrumentation overhead
 ]
 
 

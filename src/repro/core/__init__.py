@@ -15,3 +15,5 @@ from repro.core.coverage import CoverageMap  # noqa: F401
 from repro.core.profiler import Profiler, StallStack  # noqa: F401
 from repro.core.timing import Timeline, Event, InterfaceTimer  # noqa: F401
 from repro.core.watchdog import Watchdog  # noqa: F401
+from repro.core.scope import (  # noqa: F401
+    ScopeSpec, ScopePlane, instrument, digest_tree)

@@ -276,6 +276,18 @@ class CommitStreamVerifier:
     commit FIFO (the ``default_shell_config`` contract); rows beyond what
     the FIFO kept are not checkable and are skipped.
 
+    Digest first pass (ZP-Scope): ``expected_digests`` maps a window index
+    to the oracle's commit digest for that window's outputs
+    (:func:`repro.core.scope.digest_tree` over the oracle ys — the exact
+    host twin of the on-device fold). When the caller passes the drained
+    window's on-device ``digest`` and it MATCHES, the per-step/per-layer
+    host row comparison is skipped — the oracle still replays to advance
+    its state, but verification cost collapses to one uint32 compare,
+    scaling total verify cost with the scope's read rate (the paper's
+    arbitrary-granularity knob). A mismatch falls through to the full
+    compare, which localizes the divergence (step/layer) and raises.
+    ``digest_hits`` counts fast-path windows.
+
     Mid-stream resume (the farm's checkpointed-requeue protocol):
     :meth:`snapshot` captures the oracle's position — host-copied state,
     global step, and the number of batches consumed — and
@@ -288,7 +300,8 @@ class CommitStreamVerifier:
 
     def __init__(self, oracle_step: Callable, state, batches,
                  layers: int, rtol: float = 1e-5, start_step: int = 0,
-                 lane: Optional[int] = None):
+                 lane: Optional[int] = None,
+                 expected_digests: Optional[dict] = None):
         self.oracle_step = oracle_step
         self.state = state
         self._batches_src = batches
@@ -299,6 +312,8 @@ class CommitStreamVerifier:
         self._consumed = 0          # batches taken from the stream so far
         self.lane = lane            # lane-batched boards: divergences name
         # the lane, so a fused farm run localizes the veto to ONE board
+        self.expected_digests = expected_digests or {}
+        self.digest_hits = 0        # windows verified by digest alone
 
     def _iter_batches(self):
         b = self._batches_src
@@ -309,12 +324,21 @@ class CommitStreamVerifier:
         self._consumed += 1
         return batch
 
-    def __call__(self, last_step: int, records):
+    def __call__(self, last_step: int, records, digest: Optional[int] = None,
+                 window: Optional[int] = None):
         rows = np.asarray(records["fifos"]["commits"]["data"], np.float64)
         steps = rows.shape[0] // self.L
+        # Digest first pass: the on-device fold matched the precomputed
+        # oracle digest for this window — skip the host row compare, but
+        # still replay the oracle to keep its state step-locked.
+        skip_rows = (digest is not None and window is not None
+                     and window in self.expected_digests
+                     and int(digest) == int(self.expected_digests[window]))
         for s in range(steps):
             batch = self._next_batch()
             self.state, _, aux = self.oracle_step(self.state, batch)
+            if skip_rows:
+                continue
             exp = np.asarray(layer_checksums(aux), np.float64)   # (L, 2)
             got = rows[s * self.L:(s + 1) * self.L, 1:]
             err = _rel_err(got, exp).max(axis=1)                 # (L,)
@@ -324,6 +348,8 @@ class CommitStreamVerifier:
                 raise CommitDivergence(step=self.step + s, layer=l,
                                        rel_err=float(err[l]),
                                        lane=self.lane)
+        if skip_rows:
+            self.digest_hits += 1
         self.step += steps
 
     # ------------------------------------------------------------- resume --

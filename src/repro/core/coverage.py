@@ -33,6 +33,21 @@ class CoverageMap:
         self.history.append(self.fraction())
         return new_bits
 
+    def update_gates(self, gates, name: str = "scope_gates") -> float:
+        """Ingest ZP-Scope gate toggle bits — value-class coverpoints
+        OR-accumulated on-device by the instrumentation plane (same
+        under-representing CSR semantics as the mux toggles). ``gates``
+        is the drained int bit vector ((lanes, bits) under lane batching;
+        flattened so each lane's bits are distinct coverpoints). Returns
+        the coverage increment like :meth:`update`."""
+        bits = np.asarray(gates).astype(bool).reshape(-1)
+        if name not in self.bitmaps:
+            self.bitmaps[name] = np.zeros_like(bits)
+        new_bits = int((bits & ~self.bitmaps[name]).sum())
+        self.bitmaps[name] |= bits
+        self.history.append(self.fraction())
+        return new_bits
+
     def fraction(self, name: Optional[str] = None) -> float:
         maps = ([self.bitmaps[name]] if name else list(self.bitmaps.values()))
         maps = [m for m in maps if m.size]

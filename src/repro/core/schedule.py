@@ -61,6 +61,7 @@ import jax.numpy as jnp
 from repro.core.pshell import _reset_jitted
 from repro.core.pshell import drain as shell_drain
 from repro.core.pshell import stack_batches
+from repro.core.scope import ScopePlane, as_plane
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +125,10 @@ class Client:
     start_step: int = 0
     start_index: int = 0
     lanes: int = 1      # >1: a LaneBatch-fused client driving N boards
+    scope: Any = None   # ScopeSpec/ScopePlane: opt into the ZP-Scope
+    # instrumentation plane — normalization binds the client's engine /
+    # shell / drain / reset so on-device counters ride the window carry
+    # (per-lane counter slices under a fused client)
 
 
 class ClientPolicy:
@@ -255,7 +260,8 @@ class WindowScheduler:
             on_drain: Optional[Callable] = None,
             on_dispatch: Optional[Callable] = None,
             on_window: Optional[Callable] = None,
-            barriers: Sequence[DrainBarrier] = ()):
+            barriers: Sequence[DrainBarrier] = (),
+            scope: Any = None):
         """Drive ``engine`` over ``windows`` (an iterable of per-step item
         lists, e.g. from :meth:`windows`). Returns ``(state, last_ys,
         shell)``.
@@ -267,8 +273,20 @@ class WindowScheduler:
         here vetoes any barrier commit that depends on the window;
         ``on_window(plan, state)`` fires after the window's host phase
         (profiler step accounting).
+
+        ``scope`` (a ``ScopeSpec`` or ``ScopePlane``) opts this pass into
+        the ZP-Scope instrumentation plane: on-device counters ride beside
+        the shell and are fetched at the plane's read rate; the returned
+        state/ys/shell are bit-identical to an un-instrumented pass
+        (``plane.finalize`` unwraps the composite before returning).
         """
         timer = self.timer
+        drain_fn, reset = self.drain_fn, self.reset
+        plane = None
+        if scope is not None:
+            plane = as_plane(scope)
+            engine, shell, drain_fn, reset = plane.bind(
+                engine, shell, drain_fn, reset)
         pending = None              # (plan, shell_snapshot, ys)
         last_ys = None
         step = start_step
@@ -287,21 +305,22 @@ class WindowScheduler:
             with timer.phase("device"):
                 state, snap, ys = engine(state, shell, stack)
                 if self.overlap:
-                    shell = self.reset(snap) if self.reset else snap
+                    shell = reset(snap) if reset else snap
             if on_dispatch is not None:
                 on_dispatch(plan, state)
             with timer.phase("host"):
                 if self.overlap:
-                    self._flush(pending, on_drain)
+                    self._flush(pending, on_drain, drain_fn=drain_fn)
                     pending = (plan, snap, ys)
                 else:
-                    records, shell = self._drain_now(snap)
+                    records, shell = self._drain_now(snap,
+                                                     drain_fn=drain_fn)
                     self._emit(plan, records, ys, on_drain)
                 for b in barriers:
                     if b.fires(plan):
                         # commit barrier: every window up to the boundary
                         # must be drained and accepted before the action
-                        self._flush(pending, on_drain)
+                        self._flush(pending, on_drain, drain_fn=drain_fn)
                         pending = None
                         b.action(state, plan.boundary)
             if on_window is not None:
@@ -310,7 +329,9 @@ class WindowScheduler:
             step += len(items)
             index += 1
         with timer.phase("host"):
-            self._flush(pending, on_drain)
+            self._flush(pending, on_drain, drain_fn=drain_fn)
+        if plane is not None:
+            shell = plane.finalize(shell)
         return state, last_ys, shell
 
     # -------------------------------------------------------------- multi --
@@ -329,8 +350,19 @@ class WindowScheduler:
                     "run_many client with overlap=True and a drain_fn "
                     "needs a device-side `reset` to double-buffer its "
                     "shell (see WindowScheduler.__init__)")
-        return dataclasses.replace(c, drain_fn=drain_fn, stack_fn=stack_fn,
-                                   reset=reset)
+        if c.scope is None:
+            return dataclasses.replace(c, drain_fn=drain_fn,
+                                       stack_fn=stack_fn, reset=reset)
+        # ZP-Scope opt-in: bind the resolved plumbing so the counter tree
+        # rides beside the DUT shell. Applied LAST so the counters see the
+        # same engine/drain the un-instrumented client would run — the
+        # bit-identity invariant the scope CI gate checks.
+        plane = as_plane(c.scope, lanes=c.lanes)
+        engine, shell, drain_fn, reset = plane.bind(
+            c.engine, c.shell, drain_fn, reset)
+        return dataclasses.replace(c, engine=engine, shell=shell,
+                                   drain_fn=drain_fn, stack_fn=stack_fn,
+                                   reset=reset, scope=plane)
 
     def driver(self, client, *, key=None,
                on_drain: Optional[Callable] = None,

@@ -1,0 +1,475 @@
+"""ZP-Scope: the on-device instrumentation plane (AutoCounter/TracerV
+analog — DESIGN C10).
+
+The paper's complaint is that silicon characterization collapses to "simple
+performance counters" while simulation that could see deeper is too slow;
+ZynqParrot's answer is NON-INTERFERING, arbitrary-granularity observation
+of the DUT. Our farm had the opposite gap: the only default health signal
+was host wall time, which co-residence pollutes (the flaky-straggler saga
+and the ``prewarm`` workaround). ZP-Scope closes it with counters that ride
+the DUT stream itself:
+
+  counters — per-window step/token throughput accumulators (AutoCounter);
+  gates    — coverage/gate toggle bits OR-accumulated on device, the same
+             saturating-bitmap semantics :class:`~repro.core.coverage.
+             CoverageMap` applies to drained CSRs (nonfinite / zero /
+             negative / positive activity per output leaf);
+  trace    — a bounded ring of per-step event records (TracerV): fixed
+             slots so shapes stay static, each row
+             ``[global_step, mean_abs, max_abs, nonfinite]`` derived from
+             the window's stacked ``lax.scan`` outputs;
+  digest   — a cheap per-window commit digest (an order-sensitive uint32
+             fold over the output leaves' bit patterns) plus a per-window
+             digest ring sized to the read rate, giving
+             ``CommitStreamVerifier`` a first-pass divergence check.
+
+Non-interference is structural, the same invariant the P-Shell enforces:
+the scope pytree rides BESIDE the engine's state/shell in a composite
+shell ``{"zp_dut": shell, "zp_scope": counters}``; the DUT computation
+never reads a scope value, so outputs are bit-identical with the plane on
+or off (CI gates this). Everything accumulates on device; the host fetches
+the counter tree only every ``every_n_windows`` drains — the paper's
+"arbitrary granularity" read-rate knob. Between reads the plane costs one
+small extra dispatch per window (``fuse=True`` folds it into the engine's
+own dispatch for traceable engines).
+
+Opt-in is uniform: ``scope.instrument(engine, spec)`` for a bare engine,
+``WindowScheduler.run(..., scope=)``, ``Client(scope=)`` /
+``LaneBatch`` clients (per-lane counter slices via the existing lane
+axis), ``train_loop`` / ``serve`` config, and ``FarmJob(scope=)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Composite-shell keys. The scope tree rides beside the DUT shell under
+# these reserved names; `is_scoped` keys off the exact pair so plain user
+# shells (any other dict) are never mistaken for instrumented ones.
+DUT_KEY = "zp_dut"
+SCOPE_KEY = "zp_scope"
+
+GATE_NAMES = ("nonfinite", "zero", "negative", "positive")
+
+# Digest constants (Knuth multiplicative hash + FNV-ish leaf combine).
+# All folds are exact uint32 arithmetic mod 2**32 — bit-identical between
+# the jitted device fold and the numpy host twin, and order-insensitive
+# only in the reduction (the per-element position weights keep the fold
+# order-SENSITIVE in the data).
+_PHI = 2654435761
+_SALT = 40503
+_FNV = 16777619
+_M32 = 0xFFFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopeSpec:
+    """Configuration of one instrumentation plane. Frozen + hashable so
+    lane coalescing can require spec EQUALITY across members (two boards
+    with different read rates cannot share one fused counter tree).
+
+    every_n_windows — the read rate: host fetches of the counter tree
+        happen every N window drains (plus one final tail sample).
+    ring_slots — per-step trace ring capacity (0 disables the ring).
+    digest / gates — enable the commit-digest fold / gate-toggle bits.
+    fuse — trace the wrapped engine and the counter update into ONE
+        jitted dispatch. Only valid for traceable (pure-JAX) engines;
+        the default keeps the update as its own small dispatch, which is
+        safe for engines with host-side effects and leaves the DUT's
+        compiled executable untouched.
+    """
+    every_n_windows: int = 1
+    ring_slots: int = 16
+    digest: bool = True
+    gates: bool = True
+    fuse: bool = False
+
+
+def is_scoped(shell) -> bool:
+    """True if ``shell`` is a scope composite (DUT shell + counter tree)."""
+    return (isinstance(shell, dict)
+            and set(shell.keys()) == {DUT_KEY, SCOPE_KEY})
+
+
+def unwrap(shell):
+    """The DUT shell inside a scope composite (identity on plain shells).
+    Snapshot publishing and result delivery unwrap so checkpoints and
+    ``results[...]`` stay bit-identical with the plane on or off."""
+    return shell[DUT_KEY] if is_scoped(shell) else shell
+
+
+def scope_tree(shell):
+    """The device-side counter tree, or ``None`` for plain shells."""
+    return shell[SCOPE_KEY] if is_scoped(shell) else None
+
+
+# ------------------------------------------------------------- digesting --
+def fold_host(x) -> int:
+    """Host twin of the device digest fold over ONE array: cast to f32,
+    reinterpret the bit patterns as uint32, weight by position, sum mod
+    2**32. Bit-identical to the jitted fold on the same values."""
+    a = np.ascontiguousarray(np.asarray(x, np.float32)).reshape(-1)
+    bits = a.view(np.uint32)
+    n = bits.size
+    if n == 0:
+        return 0
+    w = np.arange(n, dtype=np.uint32) * np.uint32(_PHI) + np.uint32(_SALT)
+    return int((bits * w).sum(dtype=np.uint32))
+
+
+def digest_tree(ys) -> int:
+    """Host twin of the per-window digest: fold every output leaf in tree
+    order and combine. ``CommitStreamVerifier`` uses this to precompute
+    expected per-window digests from an oracle's outputs."""
+    d = 0
+    for leaf in jax.tree.leaves(ys):
+        d = ((d * _FNV) + fold_host(leaf)) & _M32
+    return d
+
+
+def _fold_dev(x, lanes: int):
+    """Device digest fold. ``lanes > 1`` folds per lane slice (axis 0),
+    returning a ``(lanes,)`` uint32 vector; solo returns a scalar."""
+    f = jnp.asarray(x).astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(f, jnp.uint32)
+    if lanes > 1:
+        bits = bits.reshape((lanes, -1))
+    else:
+        bits = bits.reshape((-1,))
+    n = bits.shape[-1]
+    w = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(_PHI)
+         + jnp.uint32(_SALT))
+    return jnp.sum(bits * w, axis=-1, dtype=jnp.uint32)
+
+
+# ----------------------------------------------------------- scope state --
+def scope_init(spec: ScopeSpec, lanes: int = 1):
+    """Fresh on-device counter tree. All shapes are static: counters are
+    scalars (per-lane vectors under a lane batch), the trace ring and the
+    per-window digest ring have fixed slot counts."""
+    def z(shape, dtype):
+        if lanes > 1:
+            shape = (lanes,) + shape
+        return jnp.zeros(shape, dtype)
+
+    tree = {
+        "windows": jnp.zeros((), jnp.int32),
+        "steps": jnp.zeros((), jnp.int32),
+        "tokens": z((), jnp.float32),
+    }
+    if spec.gates:
+        tree["gates"] = z((len(GATE_NAMES),), jnp.int32)
+    if spec.digest:
+        tree["digest"] = z((), jnp.uint32)
+        tree["win_digests"] = z((max(1, spec.every_n_windows),), jnp.uint32)
+    if spec.ring_slots > 0:
+        tree["trace"] = z((spec.ring_slots, 4), jnp.float32)
+        tree["trace_pos"] = jnp.zeros((), jnp.int32)
+    return tree
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_update(spec: ScopeSpec, lanes: int) -> Callable:
+    """Process-wide memo of the jitted counter update. ``jax.jit``
+    caches by function identity, and ``_make_update`` returns a fresh
+    closure every call — without this memo, every plane (one per farm
+    job ATTEMPT) would retrace the update, and that compile wall lands
+    in the attempt's first measured windows, polluting the very
+    straggler statistics the plane exists to clean up. ``ScopeSpec`` is
+    frozen, so ``(spec, lanes)`` is a sound cache key."""
+    return jax.jit(_make_update(spec, lanes))
+
+
+def _make_update(spec: ScopeSpec, lanes: int) -> Callable:
+    """Build the per-window counter update ``(scope, ys) -> scope``. Pure
+    JAX over the window's stacked scan outputs — jitted once per
+    ``(spec, lanes)`` via :func:`_jit_update` (retraced per ys
+    structure), never touching the DUT values."""
+    L = max(1, lanes)
+
+    def update(scope, ys):
+        leaves = [jnp.asarray(x) for x in jax.tree.leaves(ys)]
+        out = dict(scope)
+        out["windows"] = scope["windows"] + 1
+        if not leaves:
+            return out
+        # step axis: scan-stacked outputs lead with the window's step
+        # count (after the lane axis under a fused run)
+        first = leaves[0]
+        step_ax = 1 if lanes > 1 else 0
+        g = first.shape[step_ax] if first.ndim > step_ax else 1
+        out["steps"] = scope["steps"] + g
+
+        flats = []                      # (L?, n) float32 per leaf
+        tokens = 0.0
+        for x in leaves:
+            f = x.astype(jnp.float32)
+            flats.append(f.reshape((lanes, -1)) if lanes > 1
+                         else f.reshape((-1,)))
+            tokens += x.size / L        # per-board output elements
+        out["tokens"] = scope["tokens"] + jnp.float32(tokens)
+
+        if spec.gates:
+            bits = None
+            for f in flats:
+                b = jnp.stack([jnp.any(~jnp.isfinite(f), axis=-1),
+                               jnp.any(f == 0, axis=-1),
+                               jnp.any(f < 0, axis=-1),
+                               jnp.any(f > 0, axis=-1)],
+                              axis=-1).astype(jnp.int32)
+                bits = b if bits is None else bits | b
+            out["gates"] = scope["gates"] | bits
+
+        if spec.digest:
+            d = jnp.zeros((lanes,) if lanes > 1 else (), jnp.uint32)
+            for x in leaves:
+                d = d * jnp.uint32(_FNV) + _fold_dev(x, lanes)
+            slot = scope["windows"] % max(1, spec.every_n_windows)
+            ring = scope["win_digests"]
+            ring = (ring.at[:, slot].set(d) if lanes > 1
+                    else ring.at[slot].set(d))
+            out["digest"] = scope["digest"] * jnp.uint32(_FNV) + d
+            out["win_digests"] = ring
+
+        if spec.ring_slots > 0:
+            slots = spec.ring_slots
+            x = first.astype(jnp.float32)
+            if x.ndim <= step_ax:       # scalar ys: one pseudo-step
+                x = x.reshape((lanes, 1, 1) if lanes > 1 else (1, 1))
+            else:
+                x = (x.reshape((lanes, g, -1)) if lanes > 1
+                     else x.reshape((g, -1)))
+            gg = min(g, slots)          # ring can hold at most `slots`
+            x = x[..., g - gg:, :]      # newest steps win, deterministically
+            steps0 = scope["steps"] + (g - gg)
+            ids = (steps0 + jnp.arange(gg)).astype(jnp.float32)
+            if lanes > 1:
+                ids = jnp.broadcast_to(ids[None], (lanes, gg))
+            rows = jnp.stack(
+                [ids,
+                 jnp.mean(jnp.abs(x), axis=-1),
+                 jnp.max(jnp.abs(x), axis=-1),
+                 jnp.any(~jnp.isfinite(x), axis=-1).astype(jnp.float32)],
+                axis=-1)
+            idx = (scope["trace_pos"] + (g - gg) + jnp.arange(gg)) % slots
+            tr = scope["trace"]
+            tr = (tr.at[:, idx, :].set(rows) if lanes > 1
+                  else tr.at[idx, :].set(rows))
+            out["trace"] = tr
+            out["trace_pos"] = scope["trace_pos"] + g
+        return out
+
+    return update
+
+
+# -------------------------------------------------------------- the plane --
+class ScopePlane:
+    """Host handle of one instrumented run: owns the spec, the drain-rate
+    counter, and the drained samples. Binds an engine + its scheduler
+    plumbing so the counter tree threads through the window carry:
+
+        engine' : runs the DUT untouched, then folds the window's stacked
+                  outputs into the counter tree (one extra small dispatch,
+                  or fused into the engine's own with ``spec.fuse``);
+        reset'  : double-buffers the DUT shell as before and carries the
+                  counter tree forward (counters are cumulative);
+        drain'  : drains the DUT shell as before; every ``every_n_windows``
+                  drains it ALSO fetches the counter tree to the host as
+                  one sample (the only scope host-sync there is).
+
+    ``on_sample(sample)`` fires on the draining thread (the slot thread in
+    the async farm) — the farm uses it to feed telemetry and the
+    watchdog's device-side work-rate channel. ``finalize(shell)`` drains
+    the tail interval and returns the inner DUT shell.
+    """
+
+    def __init__(self, spec: ScopeSpec, lanes: int = 1,
+                 on_sample: Optional[Callable[[dict], None]] = None):
+        self.spec = spec
+        self.lanes = max(1, lanes)
+        self.on_sample = on_sample
+        self.samples: List[dict] = []
+        self._lock = threading.Lock()
+        self._drained = 0               # windows since the last sample
+        self._prev = {"steps": 0, "tokens": 0.0, "windows": 0}
+        self._upd = _jit_update(spec, self.lanes)
+        self._wrapped: dict = {}        # engine id -> instrumented engine
+        # (jit caches by function identity, so re-binding the same engine
+        # through a fresh closure would recompile the fused dispatch on
+        # every run; the cache also keeps the engine alive, so its id is
+        # never recycled while the entry exists)
+
+    # ------------------------------------------------------------- binding --
+    def instrument(self, engine: Callable) -> Callable:
+        """Wrap ``(state, shell, stack) -> (state, snap, ys)`` so the
+        composite shell threads the counter tree alongside the DUT's.
+        The DUT dispatch is untouched (its compiled executable is reused
+        as-is) unless ``spec.fuse`` traces both into one dispatch."""
+        hit = self._wrapped.get(id(engine))
+        if hit is not None:
+            return hit[1]
+        upd = self._upd
+
+        if self.spec.fuse:
+            @jax.jit
+            def wrapped(state, shell, stack):
+                state, snap, ys = engine(state, shell[DUT_KEY], stack)
+                sc = upd(shell[SCOPE_KEY], ys)
+                return state, {DUT_KEY: snap, SCOPE_KEY: sc}, ys
+        else:
+            def wrapped(state, shell, stack):
+                state, snap, ys = engine(state, shell[DUT_KEY], stack)
+                sc = upd(shell[SCOPE_KEY], ys)
+                return state, {DUT_KEY: snap, SCOPE_KEY: sc}, ys
+        self._wrapped[id(engine)] = (engine, wrapped)
+        return wrapped
+
+    def wrap_shell(self, shell):
+        if is_scoped(shell):            # e.g. a snapshot-restored composite
+            return shell
+        return {DUT_KEY: shell, SCOPE_KEY: scope_init(self.spec,
+                                                      self.lanes)}
+
+    def wrap_reset(self, reset: Optional[Callable]) -> Callable:
+        def reset2(snap):
+            dut = reset(snap[DUT_KEY]) if reset is not None \
+                else snap[DUT_KEY]
+            return {DUT_KEY: dut, SCOPE_KEY: snap[SCOPE_KEY]}
+        return reset2
+
+    def wrap_drain(self, drain_fn: Optional[Callable]) -> Callable:
+        def drain2(snap):
+            if drain_fn is not None:
+                records, dut = drain_fn(snap[DUT_KEY])
+            else:
+                records, dut = {}, snap[DUT_KEY]
+            sc = snap[SCOPE_KEY]
+            take = False
+            with self._lock:
+                self._drained += 1
+                if self._drained >= max(1, self.spec.every_n_windows):
+                    self._drained = 0
+                    take = True
+            if take:
+                self._sample(sc)
+            return records, {DUT_KEY: dut, SCOPE_KEY: sc}
+        return drain2
+
+    def bind(self, engine, shell, drain_fn, reset):
+        """One-call binding of a client's full plumbing."""
+        return (self.instrument(engine), self.wrap_shell(shell),
+                self.wrap_drain(drain_fn), self.wrap_reset(reset))
+
+    def finalize(self, shell):
+        """Stream end: drain the tail interval (windows since the last
+        read-rate boundary) and hand back the inner DUT shell."""
+        if not is_scoped(shell):
+            return shell
+        with self._lock:
+            tail, self._drained = self._drained, 0
+        if tail:
+            self._sample(shell[SCOPE_KEY])
+        return shell[DUT_KEY]
+
+    # ------------------------------------------------------------ sampling --
+    def _sample(self, sc):
+        host = jax.device_get(sc)       # the read-rate host sync
+        lanes = self.lanes
+        steps = int(host["steps"])
+        windows = int(host["windows"])
+        tok = np.asarray(host["tokens"], np.float64)
+        tokens_total = float(tok.sum())
+        sample = {
+            "seq": len(self.samples),
+            "lanes": lanes,
+            "windows": windows,
+            "steps": steps,
+            "tokens": (tok.tolist() if lanes > 1 else float(tok)),
+            "d_windows": windows - self._prev["windows"],
+            "d_steps": steps - self._prev["steps"],
+            "d_tokens": tokens_total - self._prev["tokens"],
+        }
+        sample["quiet"] = sample["d_steps"] == 0
+        if self.spec.gates:
+            sample["gates"] = np.asarray(host["gates"]).tolist()
+        if self.spec.digest:
+            dig = np.asarray(host["digest"], np.uint32)
+            ring = np.asarray(host["win_digests"], np.uint32)
+            sample["digest"] = dig.tolist() if lanes > 1 else int(dig)
+            sample["win_digests"] = ring.tolist()
+        if self.spec.ring_slots > 0:
+            pos = int(host["trace_pos"])
+            n = min(pos, self.spec.ring_slots)
+            tr = np.asarray(host["trace"])
+            head = pos % self.spec.ring_slots
+            order = (np.arange(head - n, head) % self.spec.ring_slots
+                     if n else np.arange(0))
+            sample["trace"] = (tr[:, order] if lanes > 1
+                               else tr[order]).tolist()
+            sample["trace_steps"] = pos     # total written: pos - n dropped
+        self._prev = {"steps": steps, "tokens": tokens_total,
+                      "windows": windows}
+        with self._lock:
+            self.samples.append(sample)
+        if self.on_sample is not None:
+            self.on_sample(sample)
+
+    # ------------------------------------------------------------- report --
+    def report(self) -> dict:
+        """Fleet-joinable counter table for this plane (JSON-safe)."""
+        with self._lock:
+            samples = list(self.samples)
+        last = samples[-1] if samples else {}
+        out = {
+            "spec": dataclasses.asdict(self.spec),
+            "lanes": self.lanes,
+            "samples": len(samples),
+            "windows": last.get("windows", 0),
+            "steps": last.get("steps", 0),
+            "tokens": last.get("tokens", 0.0),
+            "quiet_samples": sum(bool(s.get("quiet")) for s in samples),
+        }
+        if self.spec.gates:
+            out["gates"] = last.get("gates")
+            out["gate_names"] = list(GATE_NAMES)
+        if self.spec.digest:
+            out["digest"] = last.get("digest")
+        w = out["windows"]
+        if w:
+            tok = out["tokens"]
+            tot = (float(np.sum(tok)) if isinstance(tok, list)
+                   else float(tok))
+            out["tokens_per_window"] = tot / w
+        out["history"] = samples
+        return out
+
+
+def instrument(engine: Callable, spec: ScopeSpec, *, lanes: int = 1,
+               on_sample: Optional[Callable] = None):
+    """Produce an instrumented engine and its plane:
+    ``engine2, plane = scope.instrument(engine, spec)``. The returned
+    engine consumes/produces the composite shell — pair it with
+    ``plane.wrap_shell`` / ``plane.wrap_drain`` / ``plane.wrap_reset``,
+    or skip this helper entirely and pass ``scope=spec`` to
+    ``WindowScheduler.run``, ``Client`` or ``FarmJob`` which bind the
+    same way internally."""
+    plane = ScopePlane(spec, lanes=lanes, on_sample=on_sample)
+    return plane.instrument(engine), plane
+
+
+def as_plane(scope: Any, lanes: int = 1,
+             on_sample: Optional[Callable] = None) -> "ScopePlane":
+    """Normalize a ``scope=`` argument: a ScopeSpec builds a fresh plane,
+    a ScopePlane passes through (caller-owned sample sink wins)."""
+    if isinstance(scope, ScopePlane):
+        return scope
+    if isinstance(scope, ScopeSpec):
+        return ScopePlane(scope, lanes=lanes, on_sample=on_sample)
+    raise TypeError(f"scope= takes a ScopeSpec or ScopePlane, "
+                    f"got {type(scope).__name__}")

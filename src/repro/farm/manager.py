@@ -117,6 +117,7 @@ import numpy as np
 
 from repro.checkpoint.manager import (MemorySnapshotStore,
                                       SnapshotIntegrityError)
+from repro.core import scope as zp_scope
 from repro.core.pshell import drain as _shell_drain
 from repro.core.schedule import (Client, ClientPolicy, DrainBarrier,
                                  LaneBatch, WindowScheduler)
@@ -227,6 +228,8 @@ def lane_compatible(a: "FarmJob", b: "FarmJob") -> Optional[str]:
         return "stack_fn"
     if b.drain_fn is not a.drain_fn or b.reset is not a.reset:
         return "shell plumbing"
+    if a.scope != b.scope:
+        return "scope spec"     # one plane instruments the whole fused run
     if a.drain_fn is not None and a.reset is None \
             and a.drain_fn is not _shell_drain:
         return "drain_fn without reset"     # fused drains are deferred
@@ -288,6 +291,8 @@ class FarmJob:
     snapshot_store: Any = None          # CheckpointManager-like, per job
     lane_key: Optional[str] = None      # non-None: coalescible with same-key
     # jobs into ONE lane-batched (vmap-fused) run on a lane-capable slot
+    scope: Any = None                   # ScopeSpec: opt into the ZP-Scope
+    # instrumentation plane (per-attempt counters; restart on requeue)
 
     # ----- runtime bookkeeping (owned by the manager) -----
     requeues: int = dataclasses.field(default=0, init=False)
@@ -334,6 +339,10 @@ class _Run:
         self.closed = False
         self.start_window = 0           # resume cursor this attempt began at
         self.snapshot: Optional[JobSnapshot] = None     # latest commit here
+        # ----- ZP-Scope (per-attempt; counters restart on requeue) -----
+        self.scope_plane = None         # bound ScopePlane, if job.scope
+        self.scope_wall_acc = 0.0       # wall accumulated since last sample
+        self.scope_first = True         # first sample carries jit compile
         # ----- lane-batched (fused) runs only -----
         self.lanes: Optional[List[FarmJob]] = None      # member jobs
         self.lane_batch = None                          # the LaneBatch
@@ -430,8 +439,14 @@ class _SlotWorker(threading.Thread):
                 # (the farm analog of bitstream build time), a known
                 # one-off, not slowness; a lane-batched window is N boards
                 # of work, normalized to per-board cost
-                mgr.wd.observe(self.slot.name, mgr.clock() - td,
+                wall = mgr.clock() - td
+                mgr.wd.observe(self.slot.name, wall,
                                lanes=run.lane_count)
+                if run.scope_plane is not None:
+                    # accumulate measured walls over the scope interval;
+                    # consumed (and zeroed) when the plane's next sample
+                    # drains (_scope_observe)
+                    run.scope_wall_acc += wall
             if job.capture is not None:
                 job.capture.on_drain(plan, records, ys)
             if run.lanes is not None:
@@ -724,6 +739,11 @@ class FarmManager(ClientPolicy):
             "telemetry": self.telemetry.report(),
         }
 
+    def scope_report(self) -> dict:
+        """Fleet-wide ZP-Scope counter table (see
+        :meth:`FarmTelemetry.scope_report`)."""
+        return self.telemetry.scope_report()
+
     # ================================================== async control plane
     def _run_async(self):
         self._workers = {s.name: _SlotWorker(self, s, self.slot_queue_depth)
@@ -919,7 +939,10 @@ class FarmManager(ClientPolicy):
             name="lanes[" + "+".join(m.name for m in members) + "]",
             engine=lb.engine, windows=lb.windows, state=lb.state,
             shell=lb.shell, drain_fn=lb.drain_fn, stack_fn=lb.stack_fn,
-            reset=lb.reset, max_requeues=0)
+            reset=lb.reset, max_requeues=0,
+            scope=members[0].scope)     # spec equality is a coalescing
+        # rule, so ONE plane instruments the whole fused run (per-lane
+        # counter slices via the lane axis)
         run = _Run(fused, slot, self._next_idx, t_assigned=t_assigned)
         self._next_idx += 1
         run.lanes = list(members)
@@ -996,6 +1019,20 @@ class FarmManager(ClientPolicy):
             self._requeue_or_fail(run, f"slot thread crash: {msg[2]!r}")
         self.telemetry.occupancy(len(self._running), len(self.slots))
 
+    def _straggler_channel(self) -> str:
+        """Which watchdog channel judges the eviction ratio. When EVERY
+        running job is scoped, the device-side work-rate channel is the
+        verdict outright — "auto" would fall back to wall during warm-up
+        (the first scope sample per attempt is discarded as compile), and
+        a board legitimately doing more work per window reads as a wall
+        straggler in exactly that gap. "work" is conservative instead:
+        until enough rate samples exist there is no fleet, so no verdict.
+        Any unscoped job in the fleet keeps the mixed-signal "auto" rule."""
+        runs = self._running.values()
+        if runs and all(r.job.scope is not None for r in runs):
+            return "work"
+        return "auto"
+
     def _sweep_async(self):
         """Control-plane sweep: watchdog stragglers (measured window wall)
         + forced marks are SIGNALLED to the slot thread (honored at its
@@ -1008,7 +1045,8 @@ class FarmManager(ClientPolicy):
             # against the departed fleet's retained samples — the
             # watchdog's own min_fleet (>= 2 sampled workers) is the gate
             slow = set(self.wd.stragglers(self.straggler_factor,
-                                          min_s=self.straggler_min_s))
+                                          min_s=self.straggler_min_s,
+                                          channel=self._straggler_channel()))
             for idx, run in self._running.items():
                 if run.slot.name in slow:
                     marks.setdefault(idx, "straggler")
@@ -1077,6 +1115,9 @@ class FarmManager(ClientPolicy):
         save, so it survives donation and slot loss; the cursor handle on
         the run is what the control plane reads at requeue time."""
         job = run.job
+        # snapshots hold the DUT shell only: scope counters ride BESIDE
+        # the DUT and restart on requeue (observability, not progress)
+        shell = zp_scope.unwrap(shell)
         self._inject("snapshot.publish", job=job.name, slot=run.slot.name)
         if run.lanes is not None:
             # per-lane publish: each live member's OWN store gets its lane
@@ -1179,7 +1220,8 @@ class FarmManager(ClientPolicy):
                           drain_fn=job.drain_fn, stack_fn=job.stack_fn,
                           reset=job.reset,
                           barriers=self._gated_barriers(run),
-                          lanes=run.lane_count)
+                          lanes=run.lane_count,
+                          scope=self._scope_plane_for(run))
         snap = job.snapshot
         tree = None
         if snap is not None:
@@ -1215,7 +1257,51 @@ class FarmManager(ClientPolicy):
                       shell=shell, drain_fn=job.drain_fn,
                       stack_fn=job.stack_fn, reset=job.reset,
                       barriers=self._gated_barriers(run),
-                      start_step=start_step, start_index=start_index)
+                      start_step=start_step, start_index=start_index,
+                      scope=self._scope_plane_for(run))
+
+    # ---------------------------------------------------------- ZP-Scope --
+    def _scope_plane_for(self, run: _Run):
+        """Bind a fresh per-attempt :class:`ScopePlane` for a scoped job
+        (``None`` otherwise). One plane instruments the whole run — under
+        lane batching the counters are per-lane via the existing lane
+        axis. Drained samples land on the observing thread (the slot
+        thread in async mode) and fan into telemetry + the watchdog's
+        device-side work-rate channel."""
+        job = run.job
+        if job.scope is None:
+            return None
+        plane = zp_scope.ScopePlane(
+            job.scope, lanes=run.lane_count,
+            on_sample=lambda s: self._scope_observe(run, s))
+        run.scope_plane = plane
+        run.scope_wall_acc = 0.0
+        run.scope_first = True
+        return plane
+
+    def _scope_observe(self, run: _Run, sample: dict):
+        """One drained scope sample: record it in telemetry and feed the
+        straggler detector's work-rate channel with (accumulated measured
+        wall) / (device-side work retired this interval). The FIRST
+        sample of an attempt spans jit compilation — a known one-off, not
+        slowness — and quiet intervals (no work retired) are excluded
+        rather than averaged in. Telemetry records every sample (the
+        counters are true device-side totals even from the finalize tail
+        of a just-closed run); the straggler channel only takes samples
+        from a LIVE attempt."""
+        self.telemetry.scope(run.slot.name, run.job.name, sample)
+        if run.closed:
+            return
+        wall, run.scope_wall_acc = run.scope_wall_acc, 0.0
+        if run.scope_first:
+            run.scope_first = False
+            return
+        d = sample.get("d_tokens") or 0
+        work = sum(d) if isinstance(d, list) else d
+        if sample.get("quiet") or wall <= 0 or work <= 0:
+            self.wd.observe(run.slot.name, 0.0, quiet=True)
+            return
+        self.wd.observe(run.slot.name, wall, work=work)
 
     def _on_commit(self, k: int, plan, state, shell):
         """Lockstep snapshot hook (the async path is the slot worker's
@@ -1250,6 +1336,10 @@ class FarmManager(ClientPolicy):
                      for b in run.job.barriers)
 
     def _finish_run(self, run: _Run, state, shell):
+        if run.scope_plane is not None:
+            # tail sample (counters since the last read-rate boundary),
+            # then results publish the bare DUT shell
+            shell = run.scope_plane.finalize(shell)
         if run.lanes is not None:
             self._finish_lanes(run, state, shell)
             return
@@ -1508,6 +1598,10 @@ class FarmManager(ClientPolicy):
             # of bitstream build time) — a known one-off, not slowness; a
             # lane-batched window is N boards of work, normalized per board
             self.wd.observe(run.slot.name, cost, lanes=run.lane_count)
+            if run.scope_plane is not None:
+                # lockstep's wall proxy is the dispatch cost; consumed by
+                # _scope_observe at the next read-rate sample
+                run.scope_wall_acc += cost
         self.telemetry.dispatch(run.slot.name, self._key(run, plan), cost)
         if run.job.capture is not None:
             run.job.capture.on_dispatch(plan, state)
@@ -1621,7 +1715,8 @@ class FarmManager(ClientPolicy):
         marks: Dict[int, str] = {}
         if self.evict_stragglers and len(self._running) > 1:
             slow = set(self.wd.stragglers(self.straggler_factor,
-                                          min_s=self.straggler_min_s))
+                                          min_s=self.straggler_min_s,
+                                          channel=self._straggler_channel()))
             for k, run in self._running.items():
                 if run.slot.name in slow:
                     marks.setdefault(k, "straggler")

@@ -9,6 +9,20 @@ hand"), per-slot dispatch cost (the engine-call wall time), occupancy
 sampled at every admission/drain boundary, drain-veto counts (a job
 verifier rejecting a window), and the eviction log.
 
+Every latency channel reports n/mean/p50/p95/p99/max — tail latency is
+the farm's health signal (one slow board hides behind a mean), and each
+slot's host-overhead channels are folded into a per-slot
+:class:`~repro.core.profiler.StallStack` whose dominant term is surfaced
+in :meth:`report`/:meth:`summary` (the live stall-stack attribution the
+solo train loop gets from its Profiler, reconstructed farm-side from the
+slot threads' own timestamps).
+
+Device-side channels (ZP-Scope): ``scope(slot, job, sample)`` ingests the
+instrumentation plane's read-rate samples — on-device step/token
+counters, gate toggle bits, commit digests — and
+:meth:`scope_report` joins them into fleet-wide per-job (and per-lane)
+counter tables.
+
 Host-overhead channels (filled by the ASYNC farm's slot threads, from
 their own timestamps — the attribution that makes an async win explainable
 rather than just measured):
@@ -41,6 +55,14 @@ import time
 from collections import defaultdict, deque
 from typing import Callable, Dict, List, Tuple
 
+from repro.core.profiler import StallStack
+
+
+def _pct(s: List[float], q: float) -> float:
+    """Nearest-rank percentile on a pre-sorted list."""
+    import math
+    return s[min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))]
+
 
 def _stats(xs: List[float]) -> Dict[str, float]:
     if not xs:
@@ -49,6 +71,8 @@ def _stats(xs: List[float]) -> Dict[str, float]:
     return {"n": len(xs),
             "mean": sum(xs) / len(xs),
             "p50": s[len(s) // 2],
+            "p95": _pct(s, 0.95),
+            "p99": _pct(s, 0.99),
             "max": s[-1]}
 
 
@@ -100,6 +124,10 @@ class FarmTelemetry:
         self.fallbacks = _BoundedLog(max_events)        # snapshot fallbacks
         self.faults = _BoundedLog(max_events)   # fault-recovery log
         self.breaker_trips = defaultdict(int)   # slot -> trip count
+        # ----- device-side channels (ZP-Scope instrumentation plane) -----
+        self.scope_samples = _BoundedLog(max_events)  # {slot, job, sample}
+        self.scope_jobs: Dict[str, dict] = {}   # job -> latest cumulative
+        self.scope_quiet = defaultdict(int)     # job -> quiet samples seen
         self._t: Dict[Tuple[str, object], float] = {}
         self._lock = threading.Lock()
 
@@ -171,6 +199,54 @@ class FarmTelemetry:
         with self._lock:
             self.occupancy_samples.append((active, total))
 
+    # ----------------------------------------------- device-side events --
+    def scope(self, slot: str, job: str, sample: dict):
+        """One ZP-Scope read-rate sample drained at a barrier on ``slot``:
+        the job's cumulative on-device counters (windows/steps/tokens),
+        the interval deltas, gate toggle bits, and the running commit
+        digest. The per-job table keeps the LATEST cumulative sample (the
+        counters are monotone within an attempt); the bounded log keeps
+        the interval history for tokens/sec-over-time plots."""
+        with self._lock:
+            self.scope_samples.append({"slot": slot, "job": job,
+                                       "sample": dict(sample)})
+            if sample.get("quiet"):
+                self.scope_quiet[job] += 1
+            self.scope_jobs[job] = {
+                "slot": slot,
+                **{k: sample.get(k) for k in (
+                    "lanes", "windows", "steps", "tokens",
+                    "gates", "digest", "d_windows", "d_steps",
+                    "d_tokens")}}
+
+    def _scope_report_locked(self) -> dict:
+        jobs = {}
+        for job, row in self.scope_jobs.items():
+            row = dict(row)
+            w = row.get("windows") or 0
+            t = row.get("tokens")
+            if w and t is not None:
+                if isinstance(t, list):
+                    row["tokens_per_window"] = [x / w for x in t]
+                else:
+                    row["tokens_per_window"] = t / w
+            row["quiet_samples"] = self.scope_quiet.get(job, 0)
+            jobs[job] = row
+        return {
+            "jobs": jobs,
+            "samples": len(self.scope_samples),
+            "samples_dropped": self.scope_samples.dropped,
+            "quiet_samples": sum(self.scope_quiet.values()),
+        }
+
+    def scope_report(self) -> dict:
+        """Fleet-wide device-side counter table: per-job cumulative
+        windows/steps/tokens (per-lane lists under lane batching), derived
+        tokens-per-window throughput, gate bits, commit digest, and the
+        quiet-interval counts the straggler detector excluded."""
+        with self._lock:
+            return self._scope_report_locked()
+
     # -------------------------------------------- failure-policy events --
     def retry(self, job: str, attempt: int, backoff_s: float, why: str):
         """A failed attempt re-admitted under the job's retry budget,
@@ -224,6 +300,16 @@ class FarmTelemetry:
             devices = {}
             for slot in slots:
                 lanes = self.lanes_per_dispatch.get(slot, [])
+                # Fold the slot's host-overhead channel SUMS into a stall
+                # stack: the solo loop's Profiler attribution, rebuilt
+                # farm-side from the slot thread's own timestamps.
+                stack = StallStack(seconds={
+                    "queue": sum(self.queue_wait_ms.get(slot, [])),
+                    "dispatch": sum(self.dispatch_ms.get(slot, [])),
+                    "drain": sum(self.drain_wall_ms.get(slot, [])),
+                    "idle": sum(self.idle_ms.get(slot, [])),
+                })
+                has_stall = any(v > 0 for v in stack.seconds.values())
                 devices[slot] = {
                     "windows": self.windows.get(slot, 0),
                     "lanes_per_dispatch": _stats([float(x) for x in lanes]),
@@ -236,6 +322,9 @@ class FarmTelemetry:
                     "queue_depth_max": max(
                         self.queue_depth.get(slot, []), default=0),
                     "drain_vetoes": self.vetoes.get(slot, 0),
+                    "stall_ms": dict(stack.seconds),
+                    "dominant_stall": (stack.dominant() if has_stall
+                                       else None),
                 }
             occ = list(self.occupancy_samples)
             lane_vetoes = [dict(v) for v in self.lane_vetoes]
@@ -259,7 +348,9 @@ class FarmTelemetry:
                 ("quarantined", self.quarantined),
                 ("breaker_events", self.breaker_events),
                 ("fallbacks", self.fallbacks),
-                ("faults", self.faults)) if log.dropped}
+                ("faults", self.faults),
+                ("scope_samples", self.scope_samples)) if log.dropped}
+            scope = self._scope_report_locked()
         return {
             "devices": devices,
             "occupancy_mean": (sum(a / t for a, t in occ if t) / len(occ)
@@ -280,6 +371,7 @@ class FarmTelemetry:
             "breaker_events": breaker_events,
             "fallbacks": fallbacks,
             "faults": faults,
+            "scope": scope,
             "events_dropped": dropped,
         }
 
@@ -311,6 +403,12 @@ class FarmTelemetry:
             policy.append(f"{n_inj} faults injected")
         if policy:
             lines.append("  policy: " + ", ".join(policy))
+        sc = r["scope"]
+        if sc["samples"]:
+            lines.append(
+                f"  scope: {sc['samples']} samples over "
+                f"{len(sc['jobs'])} jobs, "
+                f"{sc['quiet_samples']} quiet intervals excluded")
         if r["events_dropped"]:
             lines.append("  dropped: " + ", ".join(
                 f"{k} {v}" for k, v in r["events_dropped"].items()))
@@ -318,7 +416,8 @@ class FarmTelemetry:
             w = d["window_ms"]
             line = f"  {slot}: {d['windows']} windows"
             if w["n"]:
-                line += f", drain p50 {w['p50']:.1f}ms max {w['max']:.1f}ms"
+                line += (f", drain p50 {w['p50']:.1f}ms "
+                         f"p99 {w['p99']:.1f}ms max {w['max']:.1f}ms")
             host = []
             for label, ch in (("queue", "queue_wait_ms"),
                               ("dispatch", "dispatch_ms"),
@@ -329,5 +428,10 @@ class FarmTelemetry:
                     host.append(f"{label} {st['p50']:.1f}ms")
             if host:
                 line += " | host: " + " ".join(host)
+            if d["dominant_stall"]:
+                tot = sum(d["stall_ms"].values()) or 1.0
+                dom = d["dominant_stall"]
+                line += (f" | stall: {dom} "
+                         f"{d['stall_ms'][dom] / tot:.0%}")
             lines.append(line)
         return "\n".join(lines)

@@ -63,6 +63,21 @@ snapshot) while the surviving lanes keep running:
   PYTHONPATH=src python -m repro.launch.farm --lanes 8 --chaos-lane
   PYTHONPATH=src python -m repro.launch.farm --lanes 8 --lockstep
 
+``--scope-smoke`` is the ZP-Scope non-interference gate (CI
+``farm-scope-smoke``): the same boards run scope-off (the oracle) and
+scope-on must deliver bit-identical outputs and final states while the
+scoped run produces a non-empty fleet scope report; ``--lanes N`` runs
+the lane-coalesced variant (per-lane counter slices). ``--scope N``
+enables the plane on the full mixed workload at a read rate of every N
+window drains, and ``--telemetry-out PATH`` dumps the merged telemetry +
+scope report as mergeable JSON:
+
+  PYTHONPATH=src python -m repro.launch.farm --scope-smoke
+  PYTHONPATH=src python -m repro.launch.farm --scope-smoke --lanes 8 \\
+      --lockstep
+  PYTHONPATH=src python -m repro.launch.farm --steps 8 --scope 2 \\
+      --telemetry-out telemetry.json
+
 SIGINT (^C) during a farm run is a GRACEFUL stop: every board is cut at
 its next drain boundary, committed prefixes and published snapshots are
 kept, the partial report + telemetry summary are printed, and the
@@ -86,6 +101,7 @@ from repro.core import DrainBarrier, plan_windows
 from repro.core.commit import default_shell_config, make_ingest
 from repro.core.pshell import PShell, drain, shell_init, stack_batches
 from repro.core.coemu import submit_subsystem_jobs
+from repro.core.scope import ScopeSpec
 from repro.core.watchdog import Watchdog
 from repro.data import SyntheticPipeline
 from repro.farm import FailurePolicy, FarmJob, FarmManager
@@ -446,7 +462,7 @@ def _lane_stack(items):
 
 
 def _submit_lane_boards(mgr, w, n_boards: int, n_steps: int, group: int,
-                        chaos_lane: bool, lane_key):
+                        chaos_lane: bool, lane_key, scope=None):
     """``n_boards`` identical-arch boards over ONE shared weight ``w``
     (per-board state differs only in seed-derived inputs and bias — the
     lane packer must broadcast ``w`` as a single device copy). With
@@ -476,7 +492,8 @@ def _submit_lane_boards(mgr, w, n_boards: int, n_steps: int, group: int,
             on_drain=lambda p, r, y, n=name: outs[n].append(
                 np.asarray(y)),
             barriers=(DrainBarrier(every=1, action=lambda s, b: None),),
-            verify=verify, lane_key=lane_key, max_requeues=2))
+            verify=verify, lane_key=lane_key, max_requeues=2,
+            scope=scope))
     return outs
 
 
@@ -556,10 +573,102 @@ def run_lanes_smoke(lanes: int = 8, chaos_lane: bool = False,
     }
 
 
+def run_scope_smoke(mode: str = "async", lanes: int = 1,
+                    every_n: int = 2, slots: int = 2,
+                    n_steps: int = 12, group: int = 2) -> dict:
+    """The ``farm-scope-smoke`` gate: the SAME boards run scope-off (the
+    oracle) and scope-on must deliver bit-identical outputs and final
+    states — the ZP-Scope non-interference invariant — and the scoped run
+    must produce a non-empty fleet scope report (on-device counters
+    actually drained at the read rate). ``lanes > 1`` additionally runs
+    the boards lane-coalesced, exercising the per-lane counter slices."""
+    w = jnp.asarray(np.random.RandomState(0).randn(8, 8)
+                    .astype(np.float32))
+    n = max(1, lanes)
+    lane_key = "scope-smoke" if n > 1 else None
+
+    mgr0 = FarmManager(slots=slots, mode=mode, evict_stragglers=False,
+                       lanes=n)
+    oracle = _submit_lane_boards(mgr0, w, n, n_steps, group,
+                                 chaos_lane=False, lane_key=lane_key)
+    mgr0.run()
+
+    spec = ScopeSpec(every_n_windows=every_n)
+    mgr = FarmManager(slots=slots, mode=mode, evict_stragglers=False,
+                      lanes=n)
+    outs = _submit_lane_boards(mgr, w, n, n_steps, group,
+                               chaos_lane=False, lane_key=lane_key,
+                               scope=spec)
+    report = mgr.run(strict=False)
+    sc = report["telemetry"]["scope"]
+
+    problems = []
+    for name in oracle:
+        same = (len(outs[name]) == len(oracle[name])
+                and all(np.array_equal(a, b)
+                        for a, b in zip(outs[name], oracle[name])))
+        if not same:
+            problems.append(f"{name}: outputs diverged with scope on")
+        s0, _ = mgr0.results[name]
+        s1, sh1 = mgr.results[name]
+        if not all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(s0),
+                                   jax.tree.leaves(s1))):
+            problems.append(f"{name}: final state diverged with scope on")
+        if isinstance(sh1, dict) and "zp_scope" in sh1:
+            problems.append(f"{name}: scope counters leaked into results")
+    if any(j["status"] != "done" for j in report["jobs"].values()):
+        problems.append("not every board finished done")
+    if not sc["samples"]:
+        problems.append("scope report is empty: no samples drained")
+    for job, row in sc["jobs"].items():
+        if not row.get("windows") or not row.get("steps"):
+            problems.append(f"{job}: scope counters never advanced "
+                            f"({row})")
+
+    return {
+        "mode": mode,
+        "lanes": n,
+        "every_n_windows": every_n,
+        "jobs": report["jobs"],
+        "scope": sc,
+        "problems": problems,
+        "ok": not problems,
+    }
+
+
+def write_telemetry(path: str, out: dict, run_key: str) -> str:
+    """Dump a farm run's merged telemetry + scope report as JSON, keyed
+    by run so repeated invocations MERGE into one file (the
+    BENCH_results.json convention — one mergeable record per run)."""
+    import os
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    key, i = run_key, 1
+    while key in data:
+        i += 1
+        key = f"{run_key}#{i}"
+    data[key] = {
+        "ts": time.time(),
+        "telemetry": out.get("telemetry", {}),
+        "scope": out.get("telemetry", {}).get("scope", {}),
+        "summary": out.get("summary"),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return key
+
+
 def run_farm(arch: str, steps: int, slots, interval: int = 2,
              synthetic_straggler: bool = False, straggler_factor: float = 6.0,
              roofline: bool = False, seed: int = 0,
-             mode: str = "async", handle_sigint: bool = False) -> dict:
+             mode: str = "async", handle_sigint: bool = False,
+             scope: ScopeSpec = None) -> dict:
     cfg = get_smoke_config(arch)
     # min_s floors the straggler RATIO check: the mixed workload's boards
     # legitimately differ in window cost (a decode window costs more than
@@ -584,6 +693,13 @@ def run_farm(arch: str, steps: int, slots, interval: int = 2,
     finalize = submit_subsystem_jobs(mgr, params, cfg, Runtime(), xs, pos,
                                      layer_idxs=[0, 1],
                                      group_size=interval)
+
+    if scope is not None:
+        # every board opts into the instrumentation plane: on-device
+        # counters drained at the read rate, feeding the scope telemetry
+        # channel and the watchdog's work-rate straggler signal
+        for j in mgr.jobs:
+            j.scope = scope
 
     straggler = None
     soak = None
@@ -633,6 +749,7 @@ def run_farm(arch: str, steps: int, slots, interval: int = 2,
         "prewarm_s": round(prewarm_s, 3),
         "jobs": report["jobs"],
         "telemetry": report["telemetry"],
+        "summary": mgr.telemetry.summary(),
         "train": {"steps": len(losses),
                   "loss_first": losses[0] if losses else None,
                   "loss_last": losses[-1] if losses else None},
@@ -685,6 +802,20 @@ def main():
                          "mid-stream; exactly that lane must be evicted "
                          "and requeued solo while the others keep "
                          "running bit-identically")
+    ap.add_argument("--scope", type=int, metavar="N", default=None,
+                    help="enable the ZP-Scope instrumentation plane on "
+                         "every board with a read rate of every N window "
+                         "drains")
+    ap.add_argument("--scope-smoke", action="store_true",
+                    help="non-interference gate: the same boards run "
+                         "scope-off and scope-on must be bit-identical "
+                         "and the scoped run must produce a non-empty "
+                         "scope report (combine with --lanes for the "
+                         "lane-coalesced variant)")
+    ap.add_argument("--telemetry-out", metavar="PATH", default=None,
+                    help="dump the run's merged telemetry + scope report "
+                         "as JSON at PATH (repeated runs merge by key, "
+                         "like BENCH_results.json)")
     ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
                     help="fault-recovery gate: inject a seeded fault "
                          "schedule; exit non-zero unless every fault was "
@@ -699,6 +830,18 @@ def main():
                    help="single-thread round-robin host loop (the "
                         "bit-identity oracle)")
     args = ap.parse_args()
+
+    if args.scope_smoke:
+        out = run_scope_smoke(mode=args.mode, lanes=args.lanes or 1,
+                              every_n=args.scope or 2, slots=args.slots)
+        if args.telemetry_out:
+            write_telemetry(args.telemetry_out,
+                            {"telemetry": {"scope": out["scope"]}},
+                            f"scope-smoke-{args.mode}-l{args.lanes or 1}")
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
 
     if args.restart_smoke:
         out = run_restart_smoke(mode=args.mode, slots=args.slots)
@@ -724,19 +867,24 @@ def main():
             sys.exit(1)
         return
 
+    scope = (ScopeSpec(every_n_windows=args.scope)
+             if args.scope is not None else None)
     try:
         out = run_farm(args.arch, args.steps, args.slots,
                        interval=args.sample_interval,
                        synthetic_straggler=args.synthetic_straggler,
                        straggler_factor=args.straggler_factor,
                        roofline=args.roofline, mode=args.mode,
-                       handle_sigint=True)
+                       handle_sigint=True, scope=scope)
     except KeyboardInterrupt:
         # ^C before the farm was running (job setup / compile) or a
         # second ^C during the graceful drain: nothing to keep, exit the
         # conventional SIGINT code without a traceback
         print("farm: interrupted before completion", file=sys.stderr)
         sys.exit(130)
+    if args.telemetry_out:
+        write_telemetry(args.telemetry_out, out,
+                        f"farm-{args.mode}-{args.arch}-s{args.steps}")
     if out.get("interrupted"):
         print(json.dumps(out, indent=1, default=float))
         print(out["summary"], file=sys.stderr)

@@ -70,7 +70,7 @@ def make_decode_engine(model, params, donate: bool = True):
 
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
-          sample_interval: int = 4):
+          sample_interval: int = 4, scope=None):
     model = build_model(cfg, Runtime())
     params = model.init(jax.random.key(seed))
     bf = make_batch_fn(cfg, batch, prompt_len, seed)
@@ -114,13 +114,21 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0,
                          * 1e3)
         fifo_rows += records["fifos"]["decode"]["count"]
 
+    scope_plane = None
+    if scope is not None:
+        from repro.core.scope import as_plane
+        scope_plane = as_plane(scope)
+        capture.attach_scope(scope_plane)
     od, odr = capture.callbacks(on_dispatch=on_dispatch, on_drain=on_drain)
     (cache, tok), _, sh = sched.run(
         engine, sched.windows(range(gen - 1)), (cache, tok), sh,
-        on_dispatch=od, on_drain=odr)
+        on_dispatch=od, on_drain=odr, scope=scope_plane)
     t2 = time.perf_counter()
     toks = np.concatenate(out_tokens, axis=1)
+    out_scope = ({} if scope_plane is None
+                 else {"scope": scope_plane.report()})
     return {
+        **out_scope,
         "prefill_s": t1 - t0,
         "decode_s": t2 - t1,
         "decode_tok_per_s": batch * (gen - 1) / max(t2 - t1, 1e-9),
@@ -140,13 +148,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sample-interval", type=int, default=4)
+    ap.add_argument("--scope", type=int, default=0, metavar="N",
+                    help="enable the ZP-Scope instrumentation plane with "
+                         "a read rate of every N window drains")
     ap.add_argument("--save-measured", action="store_true",
                     help="persist the run's measured-window roofline "
                          "record for repro.roofline.report")
     args = ap.parse_args()
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    scope = None
+    if args.scope > 0:
+        from repro.core.scope import ScopeSpec
+        scope = ScopeSpec(every_n_windows=args.scope)
     out = serve(cfg, args.batch, args.prompt_len, args.gen,
-                sample_interval=args.sample_interval)
+                sample_interval=args.sample_interval, scope=scope)
     if args.save_measured:
         from repro.roofline import save_measured
         save_measured(out["roofline"], cfg.name, "serve")

@@ -128,6 +128,15 @@ class WindowCapture:
         self._t: Dict[int, float] = {}
         self._cost: Optional[Dict[str, float]] = None
         self._cost_window: int = 0
+        self._scope = None              # ScopePlane, via attach_scope
+
+    def attach_scope(self, plane):
+        """Join a ZP-Scope plane's device-side counters to this capture:
+        :meth:`report` then carries the scope's counter table next to the
+        measured windows, so achieved-rate rows and on-device
+        tokens-per-window sit in one record."""
+        self._scope = plane
+        return self
 
     # ------------------------------------------------------------- cost ---
     def attach_cost(self, jitted_engine, *sample_args,
@@ -236,4 +245,9 @@ class WindowCapture:
                 "peak_flops_fraction": flops / cw / self.hw.peak_flops_bf16,
                 "peak_hbm_fraction": bts / cw / self.hw.hbm_bw,
             })
+        if self._scope is not None:
+            sc = self._scope.report()
+            sc.pop("history", None)     # the measured record keeps the
+            # counter table, not the per-sample stream
+            out["scope"] = sc
         return out

@@ -69,6 +69,9 @@ class LoopConfig:
     grad_compress: bool = False
     accum_steps: int = 1
     fused: bool = True          # fused step groups vs per-step dispatch
+    scope: Any = None           # ScopeSpec: ZP-Scope instrumentation
+    # plane (on-device counters drained at the read rate; bit-identical
+    # DUT stream with the plane on or off)
 
 
 def train_loop(model, loop_cfg: LoopConfig,
@@ -112,6 +115,11 @@ def train_loop(model, loop_cfg: LoopConfig,
     # cost comes off the run's own first compile — flops/bytes with no
     # second lowering
     capture = WindowCapture()
+    scope_plane = None
+    if loop_cfg.scope is not None:
+        from repro.core.scope import as_plane
+        scope_plane = as_plane(loop_cfg.scope)
+        capture.attach_scope(scope_plane)
     pipe = SyntheticPipeline(cfg, loop_cfg.batch, loop_cfg.seq,
                              seed=loop_cfg.seed, start_step=start_step)
     losses: list = []
@@ -137,7 +145,7 @@ def train_loop(model, loop_cfg: LoopConfig,
         runner = _run_fused if loop_cfg.fused else _run_per_step
         state = runner(model, loop_cfg, opt_cfg, state, shell, sh, ingest,
                        pipe, prof, wd, cov, ckpt, losses, start_step,
-                       on_drain, verifier, capture)
+                       on_drain, verifier, capture, scope_plane)
     finally:
         pipe.close()
         if orc_pipe is not None:
@@ -145,7 +153,13 @@ def train_loop(model, loop_cfg: LoopConfig,
         if ckpt:
             ckpt.wait()
 
-    return {
+    if scope_plane is not None and scope_plane.samples:
+        # fold the plane's on-device gate bits into the coverage map —
+        # the same OR-accumulated CSR semantics, one more bitmap
+        last = scope_plane.samples[-1]
+        if last.get("gates") is not None:
+            cov.update_gates(last["gates"])
+    out = {
         "state": state,
         "losses": losses,
         "coverage": cov.summary(),
@@ -154,6 +168,9 @@ def train_loop(model, loop_cfg: LoopConfig,
         "final_step": loop_cfg.steps,
         "roofline": capture.report(),
     }
+    if scope_plane is not None:
+        out["scope"] = scope_plane.report()
+    return out
 
 
 def _pipe_windows(pipe, loop_cfg, start_step):
@@ -181,7 +198,7 @@ def _step_counter(prof):
 
 def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
                prof, wd, cov, ckpt, losses, start_step, on_drain,
-               verifier=None, capture=None):
+               verifier=None, capture=None, scope_plane=None):
     """Group-granular engine: one fused dispatch per clock-gated window,
     host drain of window i overlapped with window i+1's device compute."""
     group_fn = shell.compile_group(
@@ -206,7 +223,8 @@ def _run_fused(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
     state, _, _ = sched.run(
         group_fn, _pipe_windows(pipe, loop_cfg, start_step), state, sh,
         start_step=start_step, on_drain=odr, on_dispatch=od,
-        on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg))
+        on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg),
+        scope=scope_plane)
     return state
 
 
@@ -220,7 +238,7 @@ def _chain_capture(capture, on_dispatch, on_drain):
 
 def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
                   prof, wd, cov, ckpt, losses, start_step, on_drain,
-                  verifier=None, capture=None):
+                  verifier=None, capture=None, scope_plane=None):
     """Per-step dispatch baseline (``overlap=False``: serial in-place
     drains at window boundaries). Loss materialization is deferred to drain
     boundaries — no blocking sync inside the device phase."""
@@ -256,5 +274,6 @@ def _run_per_step(model, loop_cfg, opt_cfg, state, shell, sh, ingest, pipe,
     state, _, _ = sched.run(
         engine, _pipe_windows(pipe, loop_cfg, start_step), state, sh,
         start_step=start_step, on_drain=odr, on_dispatch=od,
-        on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg))
+        on_window=_step_counter(prof), barriers=_barriers(ckpt, loop_cfg),
+        scope=scope_plane)
     return state

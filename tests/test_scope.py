@@ -1,0 +1,305 @@
+"""ZP-Scope instrumentation plane: on-device counters that ride beside
+the DUT stream and NEVER touch it.
+
+The invariants under test mirror the paper's non-interference claim:
+(1) bit-identity — a scheduler pass with the plane on returns the same
+state/ys/shell bits as one with it off; (2) the host twins — the numpy
+digest fold reproduces the jitted fold exactly, so an oracle can
+precompute expected per-window digests; (3) the read-rate knob — samples
+land every ``every_n_windows`` drains plus one finalize tail; (4) the
+trace ring keeps the newest ``ring_slots`` steps in chronological order;
+(5) the watchdog's device-side work-rate channel sees through host
+wall-clock noise that pollutes the legacy wall channel; (6) the commit
+verifier's digest first pass skips the host row compare only on an exact
+digest match."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schedule import WindowScheduler
+from repro.core.scope import (GATE_NAMES, ScopePlane, ScopeSpec, _FNV,
+                              _M32, as_plane, digest_tree, fold_host,
+                              is_scoped, scope_init)
+from repro.core.watchdog import Watchdog
+
+GROUP = 2
+
+
+@jax.jit
+def _engine(state, shell, stack):
+    def body(x, idx):
+        x = x + idx.astype(jnp.float32)
+        return x, jnp.stack([x, -x])
+    x, ys = jax.lax.scan(body, state, stack)
+    return x, shell, ys
+
+
+def _run(scope, n_steps=12, collect=None):
+    sched = WindowScheduler(interval=GROUP, overlap=True, drain_fn=None,
+                            reset=None)
+    on_drain = None
+    if collect is not None:
+        on_drain = lambda plan, records, ys: collect.append(
+            (plan.index, np.asarray(ys)))
+    return sched.run(_engine,
+                     sched.windows(jnp.arange(n_steps, dtype=jnp.int32)),
+                     jnp.float32(1.0), {}, scope=scope, on_drain=on_drain)
+
+
+# ------------------------------------------------------ non-interference --
+def test_bit_identity_with_plane_on():
+    """The DUT stream is untouched: state, last ys, drained ys, and the
+    returned shell are bitwise identical with the plane on or off, and no
+    scope key leaks out of the run."""
+    got_off, got_on = [], []
+    s_off, ys_off, sh_off = _run(None, collect=got_off)
+    plane = ScopePlane(ScopeSpec(every_n_windows=2))
+    s_on, ys_on, sh_on = _run(plane, collect=got_on)
+    np.testing.assert_array_equal(np.asarray(s_off), np.asarray(s_on))
+    np.testing.assert_array_equal(np.asarray(ys_off), np.asarray(ys_on))
+    assert len(got_off) == len(got_on) == 6
+    for (i, a), (j, b) in zip(got_off, got_on):
+        assert i == j
+        np.testing.assert_array_equal(a, b)
+    assert sh_on == sh_off == {}
+    assert not is_scoped(sh_on)
+    assert plane.samples                # the plane DID observe the run
+
+
+def test_counters_and_read_rate():
+    """12 steps / 6 windows at every_n=4: one sample at the 4th drain,
+    one finalize tail sample covering the last 2 windows."""
+    plane = ScopePlane(ScopeSpec(every_n_windows=4))
+    _run(plane)
+    assert len(plane.samples) == 2
+    s1, s2 = plane.samples
+    assert (s1["windows"], s1["steps"]) == (4, 8)
+    assert (s2["windows"], s2["steps"]) == (6, 12)
+    assert (s1["d_windows"], s2["d_windows"]) == (4, 2)
+    # tokens = output elements per board: each window's ys is (2, 2)
+    assert s1["tokens"] == pytest.approx(16.0)
+    assert s2["tokens"] == pytest.approx(24.0)
+    assert not s1["quiet"] and not s2["quiet"]
+    rep = plane.report()
+    assert rep["windows"] == 6 and rep["steps"] == 12
+    assert rep["tokens_per_window"] == pytest.approx(4.0)
+    assert rep["samples"] == 2 and rep["quiet_samples"] == 0
+
+
+def test_gate_toggle_bits():
+    """ys rows are [x, -x] with x > 0 throughout: negative and positive
+    toggle, zero and nonfinite never do."""
+    plane = ScopePlane(ScopeSpec(every_n_windows=8))
+    _run(plane)
+    gates = dict(zip(GATE_NAMES, plane.samples[-1]["gates"]))
+    assert gates == {"nonfinite": 0, "zero": 0,
+                     "negative": 1, "positive": 1}
+
+
+# ------------------------------------------------------------- digesting --
+def test_digest_device_fold_matches_host_twin():
+    """The on-device cumulative digest and the per-window digest ring are
+    bit-identical to the numpy twin folded over the drained ys — the
+    property the verifier's digest first pass rests on."""
+    collect = []
+    plane = ScopePlane(ScopeSpec(every_n_windows=4))
+    _run(plane, collect=collect)
+    host_win = {i: digest_tree(ys) for i, ys in collect}
+    cum = 0
+    for i in range(len(collect)):
+        cum = ((cum * _FNV) + host_win[i]) & _M32
+    assert plane.samples[-1]["digest"] == cum
+    # ring slot w % every_n holds window w's digest; after 6 windows the
+    # last sample's ring carries windows 4,5 (fresh) and 2,3 (stale)
+    ring = plane.samples[-1]["win_digests"]
+    assert ring[0] == host_win[4] and ring[1] == host_win[5]
+    assert ring[2] == host_win[2] and ring[3] == host_win[3]
+    # first sample: ring is exactly windows 0..3
+    assert plane.samples[0]["win_digests"] == [host_win[i]
+                                               for i in range(4)]
+
+
+def test_fold_host_matches_device_fold_bitwise():
+    x = np.linspace(-3.0, 7.0, 37, dtype=np.float32).reshape(37, 1)
+    from repro.core.scope import _fold_dev
+    assert int(jax.jit(lambda a: _fold_dev(a, 1))(x)) == fold_host(x)
+
+
+# ------------------------------------------------------------ trace ring --
+def test_trace_ring_keeps_newest_steps_in_order():
+    collect = []
+    plane = ScopePlane(ScopeSpec(every_n_windows=8, ring_slots=4))
+    _run(plane, collect=collect)
+    s = plane.samples[-1]
+    assert s["trace_steps"] == 12
+    rows = np.asarray(s["trace"])
+    np.testing.assert_array_equal(rows[:, 0], [8, 9, 10, 11])
+    # per-step mean/max |ys| from the drained windows (windows 4 and 5)
+    ys = np.concatenate([collect[4][1], collect[5][1]])      # (4, 2)
+    np.testing.assert_allclose(rows[:, 1], np.abs(ys).mean(axis=1),
+                               rtol=1e-6)
+    np.testing.assert_allclose(rows[:, 2], np.abs(ys).max(axis=1),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(rows[:, 3], np.zeros(4))
+
+
+# -------------------------------------------------------------- plumbing --
+def test_as_plane_normalization():
+    plane = ScopePlane(ScopeSpec())
+    assert as_plane(plane) is plane
+    assert isinstance(as_plane(ScopeSpec()), ScopePlane)
+    with pytest.raises(TypeError):
+        as_plane({"every_n_windows": 4})
+
+
+def test_instrument_caches_wrapped_engine():
+    """Re-binding the same engine must return the SAME wrapped callable —
+    a fresh closure per bind would recompile the fused dispatch on every
+    farm requeue."""
+    for spec in (ScopeSpec(), ScopeSpec(fuse=True)):
+        plane = ScopePlane(spec)
+        assert plane.instrument(_engine) is plane.instrument(_engine)
+
+
+def test_scope_spec_equality_is_lane_coalescing_key():
+    assert ScopeSpec(every_n_windows=4) == ScopeSpec(every_n_windows=4)
+    assert ScopeSpec(every_n_windows=4) != ScopeSpec(every_n_windows=8)
+    assert hash(ScopeSpec()) == hash(ScopeSpec())
+
+
+def test_scope_init_lane_shapes():
+    tree = scope_init(ScopeSpec(ring_slots=4), lanes=3)
+    assert tree["tokens"].shape == (3,)
+    assert tree["gates"].shape == (3, len(GATE_NAMES))
+    assert tree["win_digests"].shape == (3, 1)
+    assert tree["trace"].shape == (3, 4, 4)
+    assert tree["windows"].shape == ()      # shared across lanes
+
+
+# ------------------------------------------------- watchdog work channel --
+def test_watchdog_work_rate_sees_through_wall_noise():
+    """THE regression the plane exists for: host co-residence noise
+    inflates board A's measured wall while board B is genuinely slow
+    per unit of device work. The wall channel flags the wrong board; the
+    device-side work-rate channel flags the right one, and ``auto``
+    prefers it once every wall-sampled worker is scoped."""
+    wd = Watchdog(timeout_s=60.0)
+    for _ in range(5):
+        wd.observe("A", 0.30)               # polluted host wall
+        wd.observe("B", 0.11)
+        wd.observe("C", 0.10)
+        wd.observe("A", 0.30, work=30.0)    # 0.010 s/token — healthy
+        wd.observe("B", 0.11, work=2.0)     # 0.055 s/token — the slow DUT
+        wd.observe("C", 0.10, work=10.0)    # 0.010 s/token
+    assert wd.stragglers(2.0, channel="wall") == ["A"]
+    assert wd.stragglers(2.0, channel="work") == ["B"]
+    assert wd.stragglers(2.0) == ["B"]      # auto: full scope coverage
+
+
+def test_watchdog_auto_falls_back_on_partial_scope_coverage():
+    """A mixed fleet (some boards scoped, some not) cannot be compared in
+    seconds-per-token, so ``auto`` stays on the wall channel."""
+    wd = Watchdog(timeout_s=60.0)
+    for _ in range(3):
+        wd.observe("A", 0.30)
+        wd.observe("B", 0.10)
+        wd.observe("C", 0.10)
+        wd.observe("A", 0.30, work=30.0)    # only A is scoped
+    assert wd.stragglers(2.0) == ["A"]      # wall verdict
+
+
+def test_watchdog_quiet_intervals_are_excluded():
+    """quiet=True records only the exclusion count — an admission/drain
+    stall must not enter any straggler statistic."""
+    wd = Watchdog(timeout_s=60.0)
+    for _ in range(4):
+        wd.observe("A", 5.0, quiet=True)
+        wd.observe("B", 0.10, work=1.0)
+        wd.observe("C", 0.10, work=1.0)
+    assert not wd.durations["A"] and not wd.work_rates["A"]
+    assert wd.quiet["A"] == 4
+    assert wd.stragglers(2.0) == []
+    wd.forget("A")
+    assert wd.quiet["A"] == 0
+
+
+def test_watchdog_min_s_floor_is_judged_on_wall_scale():
+    """min_s guards against evicting microsecond-dispatch boards however
+    large the work-rate RATIO is — the floor reads the WALL median even
+    when the ratio came from the work channel."""
+    wd = Watchdog(timeout_s=60.0)
+    for _ in range(5):
+        wd.observe("A", 0.002)
+        wd.observe("B", 0.002)
+        wd.observe("C", 0.002)
+        wd.observe("A", 0.002, work=0.01)   # 0.2 s/token: huge ratio...
+        wd.observe("B", 0.002, work=1.0)
+        wd.observe("C", 0.002, work=1.0)
+    assert wd.stragglers(2.0, min_s=0.01) == []     # ...but 2ms walls
+    assert wd.stragglers(2.0, min_s=0.0) == ["A"]
+
+
+# ------------------------------------------- verifier digest first pass --
+def _toy_oracle(scale=2.0):
+    def oracle_step(state, batch):
+        b = jnp.float32(batch)
+        aux = {"scanned": (),
+               "tail": ({"checksum": jnp.stack([b, b * scale])},)}
+        return state + b, {}, aux
+    return oracle_step
+
+
+def _commit_records(batches, scale=2.0):
+    rows = np.asarray([[0.0, b, b * scale] for b in batches], np.float64)
+    return {"fifos": {"commits": {"data": rows, "count": len(rows),
+                                  "dropped": 0}}}
+
+
+def test_verifier_digest_match_skips_row_compare():
+    """An exact digest match verifies the window in one uint32 compare:
+    the host row compare is skipped (tampered rows do NOT raise), but the
+    oracle still replays so its state stays step-locked."""
+    from repro.core.coemu import CommitStreamVerifier
+
+    batches = [1.0, 2.0, 3.0, 4.0]
+    v = CommitStreamVerifier(_toy_oracle(), jnp.float32(0), batches,
+                             layers=1, expected_digests={0: 12345})
+    tampered = _commit_records(batches[0:2])
+    tampered["fifos"]["commits"]["data"][0, 1] += 99.0
+    v(1, tampered, digest=12345, window=0)
+    assert v.digest_hits == 1
+    assert v.step == 2                          # oracle replayed
+    assert float(np.asarray(v.state)) == 3.0
+
+
+def test_verifier_digest_mismatch_falls_through_to_row_compare():
+    """A digest MISMATCH is not an error by itself — the full compare
+    runs and localizes the divergence (or passes clean rows)."""
+    from repro.core.coemu import CommitDivergence, CommitStreamVerifier
+
+    batches = [1.0, 2.0, 3.0, 4.0]
+    v = CommitStreamVerifier(_toy_oracle(), jnp.float32(0), batches,
+                             layers=1, expected_digests={0: 12345, 1: 777})
+    v(1, _commit_records(batches[0:2]), digest=999, window=0)
+    assert v.digest_hits == 0                   # clean rows still pass
+    bad = _commit_records(batches[2:4])
+    bad["fifos"]["commits"]["data"][0, 1] += 99.0
+    with pytest.raises(CommitDivergence):
+        v(3, bad, digest=999, window=1)
+
+
+def test_verifier_without_digest_keys_is_unchanged():
+    """No digest/window passed (the legacy call shape): full compare."""
+    from repro.core.coemu import CommitDivergence, CommitStreamVerifier
+
+    batches = [1.0, 2.0]
+    v = CommitStreamVerifier(_toy_oracle(), jnp.float32(0), batches,
+                             layers=1)
+    bad = _commit_records(batches)
+    bad["fifos"]["commits"]["data"][1, 2] += 5.0
+    with pytest.raises(CommitDivergence):
+        v(1, bad)
+    assert v.digest_hits == 0
