@@ -183,7 +183,10 @@ class CheckpointManager:
         here — a failed write must never be silently absorbed while the
         caller keeps training past it."""
         self.wait()                                # one in-flight save max
-        host_leaves = [np.asarray(x) for x in jax.tree.leaves(state)]
+        # FORCED host copies: np.asarray would ALIAS numpy-backed leaves,
+        # letting a caller's post-save mutation tear the bytes the
+        # background thread is still writing
+        host_leaves = [np.array(x) for x in jax.tree.leaves(state)]
         paths = _leaf_paths(state)
         shardings = [str(getattr(x, "sharding", None))
                      for x in jax.tree.leaves(state)]

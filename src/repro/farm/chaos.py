@@ -20,6 +20,10 @@ Injection points (fired via ``FarmManager._inject`` /
   ``worker.loop``     a slot thread picking up an assignment (async)
   ``results.post``    before a drain posts to the results queue (async)
   ``slot.canary``     a circuit-breaker probe running
+  ``ledger.<kind>``   right AFTER a ZP-Ledger journal record lands
+                      (``ledger.commit``, ``ledger.deliver``, ...) — the
+                      window where the journal is ahead of everything
+                      the manager would have done next
 
 Fault kinds and the recovery each must produce:
 
@@ -34,6 +38,10 @@ Fault kinds and the recovery each must produce:
                                                   -> liveness requeue
   ``results_stall``     results hand-off delayed  (async only)
                                                   -> completion, late
+  ``process_kill``      SIGKILL the whole farm process (ZP-Ledger only —
+                        armed by the kill-restart harness, never by the
+                        seeded menus)             -> FarmManager.recover
+                        in a fresh process resumes from the journal
 
 Determinism: occurrences are counted PER JOB (and per slot) at each
 point. A job's own sequence of dispatch/drain/verify/store events is
@@ -51,7 +59,9 @@ when the requeue restores, before retention ages it out.
 from __future__ import annotations
 
 import dataclasses
+import os
 import random
+import signal
 import threading
 import time
 from collections import defaultdict
@@ -74,6 +84,9 @@ RAISE_KINDS = frozenset({"dispatch_exc", "slot_crash", "thread_death",
                          "commit_divergence"})
 SLEEP_KINDS = frozenset({"hung_drain", "results_stall"})
 CORRUPT_KINDS = frozenset({"snapshot_corrupt", "snapshot_truncate"})
+#: whole-process death: os.kill(SIGKILL) — no handler, no cleanup, no
+#: atexit; the only recovery is FarmManager.recover in a NEW process
+KILL_KINDS = frozenset({"process_kill"})
 
 #: the full fault menu per farm mode: the lockstep control thread cannot
 #: detect its own hang, so the async-only kinds are excluded there
@@ -124,7 +137,11 @@ class ChaosInjector:
              slot: Optional[str] = None, **ctx) -> Optional[Injection]:
         hit = None
         with self._lock:
-            for scope, name in (("job", job), ("slot", slot)):
+            # scope "farm" counts EVERY occurrence of the point across
+            # all jobs/slots (name "*") — how the kill-restart harness
+            # says "die at the Nth journaled commit, whoever commits it"
+            for scope, name in (("job", job), ("slot", slot),
+                                ("farm", "*")):
                 if name is None:
                     continue
                 key = (point, scope, name)
@@ -145,6 +162,10 @@ class ChaosInjector:
             return None
         if hit.kind in CORRUPT_KINDS:
             return hit              # the caller applies the corruption
+        if hit.kind in KILL_KINDS:
+            # whole-process death, the real thing: no exception to catch,
+            # no finally blocks, no flushes — nothing below here runs
+            os.kill(os.getpid(), signal.SIGKILL)
         raise ChaosError(
             f"injected {hit.kind} at {point} "
             f"({hit.scope} {hit.name}, occurrence {hit.at})")

@@ -236,7 +236,8 @@ def lane_compatible(a: "FarmJob", b: "FarmJob") -> Optional[str]:
     if a.capture is not None or b.capture is not None:
         return "capture"
     if a.snapshot is not None or b.snapshot is not None \
-            or a.committed_outputs or b.committed_outputs:
+            or a.committed_outputs or b.committed_outputs \
+            or a.windows_delivered or b.windows_delivered:
         return "mid-stream resume"
     if callable(a.state) or callable(b.state) \
             or callable(a.shell) or callable(b.shell):
@@ -293,6 +294,9 @@ class FarmJob:
     # jobs into ONE lane-batched (vmap-fused) run on a lane-capable slot
     scope: Any = None                   # ScopeSpec: opt into the ZP-Scope
     # instrumentation plane (per-attempt counters; restart on requeue)
+    spec: Any = None                    # registry.JobSpec this job was
+    # built from; journaled at submit so FarmManager.recover can rebuild
+    # the job in a fresh process (closure-built jobs dead-letter instead)
 
     # ----- runtime bookkeeping (owned by the manager) -----
     requeues: int = dataclasses.field(default=0, init=False)
@@ -307,7 +311,16 @@ class FarmJob:
     not_before: float = dataclasses.field(default=0.0, init=False)
     # ^ backoff gate: a requeued job is not re-admitted before this time
     committed_outputs: List = dataclasses.field(
-        default_factory=list, init=False)   # delivered prefix [0, cursor)
+        default_factory=list, init=False)   # committed windows from _base:
+    # committed_outputs[i] is window (_base + i)
+    windows_delivered: int = dataclasses.field(default=0, init=False)
+    # ^ exactly-once on_drain cursor: windows [0, windows_delivered) have
+    # been handed to the sink (this process OR, after recover(), a dead
+    # predecessor — the suppression that keeps delivery exactly-once
+    # across process lifetimes)
+    _base: int = dataclasses.field(default=0, init=False)
+    # ^ recovery resume base: windows [0, _base) were delivered by a
+    # previous process and are not in hand here
     _snap_like: Any = dataclasses.field(default=None, init=False)
     _verify_init: Any = dataclasses.field(default=None, init=False)
 
@@ -560,6 +573,7 @@ class FarmManager(ClientPolicy):
                  poll_s: float = 0.02,
                  policy: Optional[FailurePolicy] = None,
                  lanes: int = 1,
+                 ledger: Any = None,
                  clock: Callable[[], float] = time.perf_counter):
         if mode not in ("lockstep", "async"):
             raise ValueError(f"unknown farm mode: {mode!r}")
@@ -577,6 +591,7 @@ class FarmManager(ClientPolicy):
         self.slot_queue_depth = max(1, slot_queue_depth)
         self.poll_s = poll_s
         self.policy = policy
+        self.ledger = ledger        # FarmLedger: durable journal (ZP-Ledger)
         self.clock = clock
         self.injector = None        # chaos harness hook (repro.farm.chaos)
 
@@ -608,6 +623,142 @@ class FarmManager(ClientPolicy):
     def submit(self, job: FarmJob) -> FarmJob:
         self.jobs.append(job)
         self.queue.append(job)
+        spec = None
+        if job.spec is not None:
+            try:
+                spec = job.spec.to_json()
+            except Exception:   # noqa: BLE001 — an unserializable spec
+                spec = None     # journals as closure-built (dead-letters
+                # on recovery with a reason instead of raising here)
+        self._journal("submit", job=job.name, spec=spec)
+        return job
+
+    def submit_spec(self, spec, registry: Any = None) -> FarmJob:
+        """Build and submit a serializable :class:`~repro.farm.registry.
+        JobSpec` — the durable intake path: the spec is journaled with
+        the submit record, so ``recover()`` can re-instantiate the job
+        after a process death."""
+        return self.submit(spec.build(registry))
+
+    # ------------------------------------------------- crash recovery --
+    @classmethod
+    def recover(cls, ledger, registry: Any = None, **kwargs
+                ) -> "FarmManager":
+        """Rebuild a farm from its journal after whole-process death
+        (SIGKILL, OOM, power cut). For every job the journal shows
+        incomplete: re-instantiate it from its journaled ``JobSpec``,
+        cross-check the ledger's commit cursor against the newest
+        *verifiable* on-disk snapshot (``choose_resume`` — a torn newest
+        snapshot rewinds to an older one, none at all rewinds to window
+        0), seed the ``windows_delivered`` suppression cursor from the
+        journal's deliver records so ``on_drain`` stays exactly-once
+        across process lifetimes, and rebase any unconsumed retry backoff
+        onto this process's clock. Jobs that cannot be rebuilt (no
+        serializable spec — closure-submitted — or a factory that fails)
+        are DEAD-LETTERED with a reason, never raised. Terminal jobs
+        (done/quarantined/failed) re-enter the report as stubs so the
+        recovered run's report covers the whole campaign."""
+        mgr = cls(ledger=ledger, **kwargs)
+        state = ledger.replay()
+        if ledger.dropped_records or ledger.dropped_bytes:
+            mgr.telemetry.recovery(
+                "<journal>", note=f"torn tail truncated: "
+                f"{ledger.dropped_records} record(s), "
+                f"{ledger.dropped_bytes} byte(s) dropped")
+        for name, js in state.jobs.items():
+            if js.status in ("done", "quarantined", "failed"):
+                stub = FarmJob(name=name, engine=None, windows=[])
+                stub.status = js.status
+                stub.error = js.error
+                stub.windows_drained = js.windows or 0
+                stub.windows_delivered = max(js.delivered,
+                                             js.windows or 0)
+                mgr.jobs.append(stub)
+                continue
+            job, note = mgr._rebuild_job(js, registry)
+            if job is None:
+                mgr._dead_letter(name, note)
+                continue
+            mgr.jobs.append(job)
+            mgr.queue.append(job)
+            w = job.snapshot.window if job.snapshot else 0
+            step = job.snapshot.step if job.snapshot else None
+            mgr.telemetry.recovery(name, window=w, step=step,
+                                   delivered=job.windows_delivered,
+                                   note=note)
+            mgr._journal("recover", job=name, window=w,
+                         delivered=job.windows_delivered)
+        return mgr
+
+    def _rebuild_job(self, js, registry: Any = None):
+        """One journal entry -> a live, resume-positioned FarmJob (or
+        ``(None, reason)`` for the dead-letter path)."""
+        from repro.farm.ledger import choose_resume
+        from repro.farm.registry import JobSpec
+        if js.spec is None:
+            return None, ("no serializable JobSpec in the journal "
+                          "(submitted from closures — use submit_spec)")
+        try:
+            spec = JobSpec.from_json(js.spec)
+            job = spec.build(registry)
+        except Exception as e:      # noqa: BLE001 — dead-letter, not raise
+            return None, f"JobSpec rebuild failed: {e!r}"
+        job.attempts = js.attempts
+        job.requeues = js.requeues
+        job.windows_delivered = js.delivered
+        if js.backoff_s > 0:
+            # rebase the journal's RELATIVE backoff onto this process's
+            # clock (the dead process's absolute not_before is meaningless
+            # against a fresh monotonic origin)
+            job.not_before = self.clock() + float(js.backoff_s)
+        verify_fn = (job.snapshot_store.verify
+                     if hasattr(job.snapshot_store, "verify") else None)
+        window, step = choose_resume(js.commits, js.delivered, verify_fn)
+        committed = max((int(c[1]) for c in js.commits), default=0)
+        note = ""
+        if window > 0:
+            job.snapshot = JobSnapshot(step=int(step), window=int(window))
+            job._base = window
+            try:
+                job._snap_like = self._skeleton_for(job)
+            except Exception as e:  # noqa: BLE001 — skeleton from the
+                # factory's initial trees failed; fall back to window 0
+                job.snapshot = None
+                job._base = 0
+                window, step = 0, None
+                note = f"resume skeleton failed ({e!r}); "
+        if window == 0 and committed:
+            note += ("no verifiable snapshot at or behind the delivered "
+                     "cursor; window-0 replay")
+        # work lost to the death: committed-or-delivered windows this
+        # process must re-run (delivered-but-past-resume ones re-run
+        # suppressed)
+        job.windows_replayed = max(committed, js.delivered) - window
+        return job, note
+
+    def _skeleton_for(self, job: FarmJob):
+        """Structure-only `like` tree for ``CheckpointManager.restore``
+        in a fresh process (the dead one's ``_snap_like`` died with it):
+        rebuilt from the factory's initial state/shell/verifier trees —
+        shapes don't matter, only the pytree structure and leaf paths."""
+        state = job.state() if callable(job.state) else job.state
+        shell = job.shell() if callable(job.shell) else job.shell
+        vsnap = (job.verify.snapshot()
+                 if hasattr(job.verify, "snapshot") else {})
+        tree = {"state": state, "shell": zp_scope.unwrap(shell),
+                "verify": vsnap,
+                "cursor": {"step": np.int64(0), "window": np.int64(0)}}
+        return jax.tree.map(lambda _: 0, tree)
+
+    def _dead_letter(self, name: str, why: str) -> FarmJob:
+        """Quarantine an unrecoverable journal entry with its reason (a
+        recovery must complete the rest of the campaign, not raise)."""
+        job = FarmJob(name=name, engine=None, windows=[])
+        job.status = "quarantined"
+        job.error = why
+        self.jobs.append(job)
+        self.telemetry.quarantine(name, why)
+        self._journal("quarantine", job=name, why=str(why))
         return job
 
     def force_evict(self, job_name: str):
@@ -632,6 +783,18 @@ class FarmManager(ClientPolicy):
         the production fast path is one attribute check)."""
         if self.injector is not None:
             self.injector.fire(point, **ctx)
+
+    def _journal(self, kind: str, **fields):
+        """Durably append one ledger record (no-op without a ledger).
+        The ``ledger.<kind>`` injection point fires AFTER the record is
+        on disk — a ``process_kill`` there models dying with the journal
+        ahead of everything the manager would have done next, the exact
+        edge ``recover()`` must close."""
+        if self.ledger is None:
+            return
+        self.ledger.append(kind, **fields)
+        self._inject("ledger." + kind, job=fields.get("job"),
+                     slot=fields.get("slot"))
 
     # -------------------------------------------- slot health / breaker --
     def _budget(self, job: FarmJob) -> int:
@@ -732,6 +895,7 @@ class FarmManager(ClientPolicy):
                               "windows_committed": (j.snapshot.window
                                                     if j.snapshot else 0),
                               "windows_replayed": j.windows_replayed,
+                              "windows_delivered": j.windows_delivered,
                               "error": j.error} for j in self.jobs},
             "quarantined": [j.name for j in self.jobs
                             if j.status == "quarantined"],
@@ -850,13 +1014,19 @@ class FarmManager(ClientPolicy):
             self._probing.add(name)
             self.telemetry.breaker(name, "probe")
 
-    def _shutdown_async(self):
-        """Graceful-stop sweep: orphan the queue, cut every running job at
-        its next drain boundary (its committed prefix stays delivered)."""
+    def _orphan_queue(self):
+        """Mark everything still queued ``interrupted`` (journaled, so a
+        recovery re-queues it instead of losing it)."""
         while self.queue:
             job = self.queue.popleft()
             if job.status != "done":
                 job.status = "interrupted"
+                self._journal("interrupted", job=job.name)
+
+    def _shutdown_async(self):
+        """Graceful-stop sweep: orphan the queue, cut every running job at
+        its next drain boundary (its committed prefix stays delivered)."""
+        self._orphan_queue()
         for run in self._running.values():
             if not run.evict_flag.is_set():
                 run.evict_why = "shutdown"
@@ -889,8 +1059,8 @@ class FarmManager(ClientPolicy):
         jobs stay queued in their original order."""
         cap = getattr(slot, "lane_capacity", 1)
         if cap <= 1 or job.lane_key is None or job.snapshot is not None \
-                or job.committed_outputs or callable(job.state) \
-                or callable(job.shell):
+                or job.committed_outputs or job.windows_delivered \
+                or callable(job.state) or callable(job.shell):
             return [job]
         members, skipped = [job], []
         now = self.clock()
@@ -914,6 +1084,8 @@ class FarmManager(ClientPolicy):
             job.attempts += 1
             job.status = "running"
             job.last_slot = slot.name
+            self._journal("admit", job=job.name, slot=slot.name,
+                          attempt=job.attempts)
             run = _Run(job, slot, self._next_idx, t_assigned=t_assigned)
             self._next_idx += 1
         self.telemetry.lanes(slot.name, len(members))
@@ -954,6 +1126,8 @@ class FarmManager(ClientPolicy):
             m.status = "running"
             m.last_slot = slot.name
             self._avoid.pop(m.name, None)
+            self._journal("admit", job=m.name, slot=slot.name,
+                          attempt=m.attempts)
         return run
 
     def _lane_barriers(self, run: _Run, proto) -> tuple:
@@ -987,6 +1161,7 @@ class FarmManager(ClientPolicy):
         if kind == "drain":
             _, _, plan, records, ys = msg
             run.outputs.append((plan, records, ys))
+            self._deliver_committed(run)
             return
         if kind == "lane_drain":
             _, _, plan, delivered, faulted = msg
@@ -1143,6 +1318,9 @@ class FarmManager(ClientPolicy):
                 m._snap_like = jax.tree.map(lambda _: 0, tree)
                 m.snapshot = JobSnapshot(step=plan.boundary,
                                          window=plan.index + 1)
+                self._journal("commit", job=m.name, slot=run.slot.name,
+                              step=int(plan.boundary),
+                              window=int(plan.index) + 1)
             run.snapshot = JobSnapshot(step=plan.boundary,
                                        window=plan.index + 1)
             return
@@ -1158,6 +1336,11 @@ class FarmManager(ClientPolicy):
         job._snap_like = jax.tree.map(lambda _: 0, tree)
         run.snapshot = JobSnapshot(step=plan.boundary,
                                    window=plan.index + 1)
+        # journal AFTER the store publish: a journaled commit whose
+        # snapshot never landed is exactly what recovery's verify
+        # cross-check (choose_resume) exists to rewind past
+        self._journal("commit", job=job.name, slot=run.slot.name,
+                      step=int(plan.boundary), window=int(plan.index) + 1)
 
     def _restore_snapshot(self, job: FarmJob, slot: DeviceSlot,
                           snap: JobSnapshot):
@@ -1184,18 +1367,27 @@ class FarmManager(ClientPolicy):
             self.telemetry.fallback(slot.name, job.name, want, None,
                                     repr(e))
             job.windows_replayed += snap.window
-            job.committed_outputs = []      # windows re-run AND re-deliver
+            job.committed_outputs = []      # windows re-run; the
+            # windows_delivered cursor is NOT rewound — already-delivered
+            # windows are suppressed on re-drain (exactly-once holds)
+            job._base = 0
             job.snapshot = None
             return None, None
         if got != want:
             # landed on an older snapshot: rewind the cursor to ITS
             # recorded position and drop the committed prefix beyond it
+            # (committed_outputs[i] is window _base + i for recovered jobs)
             new_window = int(np.asarray(
                 tree.get("cursor", {}).get("window", 0)))
             self.telemetry.fallback(slot.name, job.name, want, got,
                                     f"corrupt snapshot at step {want}")
             job.windows_replayed += max(0, snap.window - new_window)
-            job.committed_outputs = job.committed_outputs[:new_window]
+            keep = new_window - job._base
+            if keep <= 0:
+                job.committed_outputs = []
+                job._base = new_window
+            else:
+                job.committed_outputs = job.committed_outputs[:keep]
             snap = JobSnapshot(step=got, window=new_window)
             job.snapshot = snap
         return tree, snap
@@ -1311,6 +1503,8 @@ class FarmManager(ClientPolicy):
         if run is None or run.fault is not None:
             return
         self._publish_snapshot(run, plan, state, shell)
+        self._deliver_committed(run)    # ledger mode: hand over the newly
+        # committed windows now (lockstep's control thread owns delivery)
 
     def _inject_lockstep(self, k: int, point: str, plan):
         """Lockstep route for the ClientDriver injection points (the async
@@ -1353,9 +1547,63 @@ class FarmManager(ClientPolicy):
         job.windows_drained = len(outputs)
         self.results[job.name] = (state, shell)
         self.outputs[job.name] = outputs
-        if job.on_drain is not None:
+        if self.ledger is not None:
+            # ledger mode delivers incrementally as commits land (so a
+            # crash costs only the undelivered tail); this hands over
+            # whatever remains past the last commit
+            self._deliver_upto(job, outputs, job._base,
+                               job._base + len(outputs))
+        elif job.on_drain is not None:
             for plan, records, ys in outputs:       # exactly-once, in order
                 job.on_drain(plan, records, ys)
+            job.windows_delivered = len(outputs)
+        else:
+            job.windows_delivered = len(outputs)
+        self._journal("done", job=job.name,
+                      windows=job._base + len(outputs))
+
+    # ------------------------------------------------- ledger delivery --
+    def _deliver_upto(self, job: FarmJob, outputs: List, base: int,
+                      upto: int):
+        """Ledger-mode exactly-once delivery: hand windows
+        ``[windows_delivered, upto)`` to the sink in order (window ``g``
+        read from ``outputs[g - base]``) and journal the advanced cursor.
+        The ``windows_delivered`` cursor — seeded from the journal by
+        ``recover()`` — suppresses windows a dead predecessor already
+        delivered, which is what makes ``on_drain`` exactly-once ACROSS
+        process lifetimes. Control thread only (lockstep's control thread
+        or the async control plane)."""
+        upto = min(upto, base + len(outputs))
+        if job.windows_delivered >= upto:
+            return
+        if job.on_drain is not None:
+            while job.windows_delivered < upto:
+                g = job.windows_delivered
+                if g < base:            # defensively skip a gap below the
+                    job.windows_delivered = base    # in-hand range
+                    continue
+                plan, records, ys = outputs[g - base]
+                job.on_drain(plan, records, ys)
+                job.windows_delivered = g + 1
+        else:
+            job.windows_delivered = upto
+        # journaled AFTER the sink returns: a crash between the sink and
+        # this record re-delivers at most the windows of this one batch —
+        # the documented idempotent-sink edge of the WAL contract
+        self._journal("deliver", job=job.name, upto=job.windows_delivered)
+
+    def _deliver_committed(self, run: _Run):
+        """Deliver a solo run's committed prefix as commits land (ledger
+        mode only — legacy mode keeps delivery at completion). Called at
+        drain/commit ingestion on the control thread; the cursor never
+        passes ``min(committed, windows in hand)``."""
+        if self.ledger is None or run.lanes is not None or run.closed:
+            return
+        snap = run.snapshot or run.job.snapshot
+        if snap is None:
+            return
+        self._deliver_upto(run.job, run.outputs, run.start_window,
+                           snap.window)
 
     # ------------------------------------------------------ lane lifecycle --
     def _lane_ingest(self, run: _Run, plan, records, ys):
@@ -1419,10 +1667,14 @@ class FarmManager(ClientPolicy):
         run.lane_faults.setdefault(lane, None)
         m = run.lanes[lane]
         cursor = self._adopt_lane(run, lane)
+        if self.ledger is not None:
+            self._deliver_upto(m, m.committed_outputs, m._base, cursor)
         # the vetoed window itself re-runs on the solo attempt too
         m.windows_replayed += max(
             0, len(run.lane_outputs[lane]) - cursor) + 1
         self.telemetry.eviction(run.slot.name, m.name, why)
+        self._journal("evict", job=m.name, slot=run.slot.name,
+                      why=str(why))
         self._requeue_member(m, run.slot.name, why)
 
     def _retire_lanes(self, run: _Run, why: str, interrupted: bool = False):
@@ -1441,10 +1693,13 @@ class FarmManager(ClientPolicy):
                 continue
             run.lane_detached.add(lane)
             cursor = self._adopt_lane(run, lane)
+            if self.ledger is not None:
+                self._deliver_upto(m, m.committed_outputs, m._base, cursor)
             m.windows_replayed += max(
                 0, len(run.lane_outputs[lane]) - cursor)
             if interrupted:
                 m.status = "interrupted"
+                self._journal("interrupted", job=m.name)
             else:
                 self._requeue_member(m, run.slot.name, why)
 
@@ -1459,6 +1714,13 @@ class FarmManager(ClientPolicy):
             if backoff > 0:
                 job.not_before = self.clock() + backoff
             self.telemetry.retry(job.name, job.requeues, backoff, why)
+            # backoff is journaled as the RELATIVE delay, not the
+            # absolute not_before: self.clock() is a process-local
+            # monotonic origin, so a recovering process REBASES the
+            # remaining delay onto its own clock instead of inheriting a
+            # timestamp that could stall re-admission arbitrarily long
+            self._journal("requeue", job=job.name, attempt=job.requeues,
+                          backoff_s=float(backoff), why=str(why))
             job.status = "queued"
             self._avoid[job.name] = slot_name
             self.queue.appendleft(job)
@@ -1466,9 +1728,11 @@ class FarmManager(ClientPolicy):
             job.status = "quarantined"
             job.error = why
             self.telemetry.quarantine(job.name, why)
+            self._journal("quarantine", job=job.name, why=str(why))
         else:
             job.status = "failed"
             job.error = why
+            self._journal("failed", job=job.name, why=str(why))
 
     def _finish_lanes(self, run: _Run, state, shell):
         """Fused-run completion: every surviving lane delivers its full
@@ -1489,9 +1753,17 @@ class FarmManager(ClientPolicy):
             self.results[m.name] = (lb.slice_state(state, lane),
                                     lb.slice_shell(shell, lane))
             self.outputs[m.name] = outputs
-            if m.on_drain is not None:
+            if self.ledger is not None:
+                self._deliver_upto(m, outputs, m._base,
+                                   m._base + len(outputs))
+            elif m.on_drain is not None:
                 for plan, records, ys in outputs:
                     m.on_drain(plan, records, ys)
+                m.windows_delivered = len(outputs)
+            else:
+                m.windows_delivered = len(outputs)
+            self._journal("done", job=m.name,
+                          windows=m._base + len(outputs))
 
     # ----------------------------------------------- ClientPolicy protocol --
     def admit(self, round_idx: int):
@@ -1675,10 +1947,7 @@ class FarmManager(ClientPolicy):
             self._running.pop(k)
             self._free.append(run.slot)
             self._retire_interrupted(run)
-        while self.queue:
-            job = self.queue.popleft()
-            if job.status != "done":
-                job.status = "interrupted"
+        self._orphan_queue()
 
     def _drain_interrupted(self):
         """Post-run sweep for a shutdown that landed after the last admit
@@ -1687,10 +1956,7 @@ class FarmManager(ClientPolicy):
             self._running.pop(k)
             self._free.append(run.slot)
             self._retire_interrupted(run)
-        while self.queue:
-            job = self.queue.popleft()
-            if job.status != "done":
-                job.status = "interrupted"
+        self._orphan_queue()
 
     def _retire_interrupted(self, run: _Run):
         """A shutdown-cut attempt: adopt its committed progress (snapshot
@@ -1699,9 +1965,13 @@ class FarmManager(ClientPolicy):
         if run.lanes is not None:
             self._retire_lanes(run, "shutdown", interrupted=True)
             return
-        self._adopt_progress(run)
+        cursor = self._adopt_progress(run)
+        if self.ledger is not None:
+            self._deliver_upto(run.job, run.job.committed_outputs,
+                               run.job._base, cursor)
         self.wd.forget(run.slot.name)
         run.job.status = "interrupted"
+        self._journal("interrupted", job=run.job.name)
 
     def _admit_one(self, job: FarmJob, slot: DeviceSlot) -> Client:
         members = self._gather_lanes(job, slot)
@@ -1771,6 +2041,12 @@ class FarmManager(ClientPolicy):
             return
         job = run.job
         cursor = self._adopt_progress(run)
+        if self.ledger is not None:
+            # the adopted committed prefix is deliverable NOW — held
+            # windows would be lost if the process died before the
+            # requeued attempt completed
+            self._deliver_upto(job, job.committed_outputs, job._base,
+                               cursor)
         # work lost to the eviction: drained-but-uncommitted windows that
         # the resumed attempt must re-run (0 when the evict landed on a
         # commit; the whole attempt under the legacy no-barrier replay)
@@ -1778,6 +2054,8 @@ class FarmManager(ClientPolicy):
             0, run.start_window + len(run.outputs) - cursor)
         self.wd.forget(run.slot.name)
         self.telemetry.eviction(run.slot.name, job.name, why)
+        self._journal("evict", job=job.name, slot=run.slot.name,
+                      why=str(why))
         if job.capture is not None:
             job.capture.reset(upto=cursor)  # committed rows stay
         self._requeue_member(job, run.slot.name, why)

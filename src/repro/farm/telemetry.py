@@ -123,6 +123,8 @@ class FarmTelemetry:
         self.breaker_events = _BoundedLog(max_events)   # {slot, event, ..}
         self.fallbacks = _BoundedLog(max_events)        # snapshot fallbacks
         self.faults = _BoundedLog(max_events)   # fault-recovery log
+        self.recoveries = _BoundedLog(max_events)   # ZP-Ledger: jobs a
+        # crashed process's journal resumed ({job, window, delivered, ..})
         self.breaker_trips = defaultdict(int)   # slot -> trip count
         # ----- device-side channels (ZP-Scope instrumentation plane) -----
         self.scope_samples = _BoundedLog(max_events)  # {slot, job, sample}
@@ -283,6 +285,18 @@ class FarmTelemetry:
                 "got_step": None if got_step is None else int(got_step),
                 "why": why})
 
+    def recovery(self, job: str, window: int = 0, step=None,
+                 delivered: int = 0, note: str = ""):
+        """ZP-Ledger crash recovery: ``job`` was rebuilt from the journal
+        after whole-process death and will resume at ``window`` (0 =
+        full replay) with windows ``[0, delivered)`` suppressed — the
+        dead process already delivered them."""
+        with self._lock:
+            self.recoveries.append({
+                "job": job, "window": int(window),
+                "step": None if step is None else int(step),
+                "delivered": int(delivered), "note": note})
+
     def fault(self, point: str, kind: str, job: str = "", slot: str = "",
               event: str = "injected"):
         """Fault-recovery log entry: the chaos harness records each
@@ -338,6 +352,7 @@ class FarmTelemetry:
             breaker_events = [dict(b) for b in self.breaker_events]
             fallbacks = [dict(f) for f in self.fallbacks]
             faults = [dict(f) for f in self.faults]
+            recoveries = [dict(r) for r in self.recoveries]
             trips = dict(self.breaker_trips)
             dropped = {name: log.dropped for name, log in (
                 ("evictions", self.evictions),
@@ -349,6 +364,7 @@ class FarmTelemetry:
                 ("breaker_events", self.breaker_events),
                 ("fallbacks", self.fallbacks),
                 ("faults", self.faults),
+                ("recoveries", self.recoveries),
                 ("scope_samples", self.scope_samples)) if log.dropped}
             scope = self._scope_report_locked()
         return {
@@ -371,6 +387,7 @@ class FarmTelemetry:
             "breaker_events": breaker_events,
             "fallbacks": fallbacks,
             "faults": faults,
+            "recoveries": recoveries,
             "scope": scope,
             "events_dropped": dropped,
         }
@@ -398,6 +415,8 @@ class FarmTelemetry:
                 f"{sum(r['breaker_trips'].values())} breaker trips")
         if r["fallbacks"]:
             policy.append(f"{len(r['fallbacks'])} snapshot fallbacks")
+        if r["recoveries"]:
+            policy.append(f"{len(r['recoveries'])} crash-recovered")
         if r["faults"]:
             n_inj = sum(f["event"] == "injected" for f in r["faults"])
             policy.append(f"{n_inj} faults injected")

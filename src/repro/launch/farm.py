@@ -78,16 +78,38 @@ scope report as mergeable JSON:
   PYTHONPATH=src python -m repro.launch.farm --steps 8 --scope 2 \\
       --telemetry-out telemetry.json
 
-SIGINT (^C) during a farm run is a GRACEFUL stop: every board is cut at
-its next drain boundary, committed prefixes and published snapshots are
-kept, the partial report + telemetry summary are printed, and the
-process exits 130. A second ^C kills immediately.
+``--ledger DIR`` attaches a ZP-Ledger write-ahead journal to the run: a
+toy multi-board workload journals every control-plane decision to
+``DIR/journal.jsonl``, publishes durable per-window snapshots under
+``DIR/snaps/``, and delivers each window as an atomic per-window output
+file under ``DIR/outputs/``. ``--kill-after-commits N`` arms a
+``process_kill`` chaos injection that SIGKILLs the whole process at the
+N-th journaled commit (no cleanup, no flushes — real process death);
+``--recover`` rebuilds the farm from the journal and finishes the
+campaign. ``--killrestart-smoke`` is the whole-process crash-recovery
+gate (CI ``farm-killrestart-smoke``): it runs the fault-free oracle
+in-process, launches a subprocess that kills itself mid-stream, then a
+``--recover`` subprocess that must finish with bit-identical per-window
+outputs, every window delivered exactly once across both process
+lifetimes, and ``windows_replayed < windows_committed``:
+
+  PYTHONPATH=src python -m repro.launch.farm --killrestart-smoke
+  PYTHONPATH=src python -m repro.launch.farm --killrestart-smoke \\
+      --lockstep
+
+SIGINT (^C) and SIGTERM during a farm run are a GRACEFUL stop: every
+board is cut at its next drain boundary, committed prefixes and
+published snapshots are kept, the partial report + telemetry summary
+are printed, and the process exits ``128 + signum`` (130 for SIGINT,
+143 for SIGTERM — what a supervisor's kill/timeout expects from a clean
+drain). A second signal kills immediately.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import signal
 import sys
 import time
@@ -104,8 +126,9 @@ from repro.core.coemu import submit_subsystem_jobs
 from repro.core.scope import ScopeSpec
 from repro.core.watchdog import Watchdog
 from repro.data import SyntheticPipeline
-from repro.farm import FailurePolicy, FarmJob, FarmManager
-from repro.farm.chaos import ChaosHarness
+from repro.farm import (FailurePolicy, FarmJob, FarmLedger, FarmManager,
+                        JobSpec, register)
+from repro.farm.chaos import ChaosHarness, ChaosInjector, Injection
 from repro.launch.serve import decode_shell_config, make_decode_engine
 from repro.models import build_model
 from repro.models.runtime import Runtime
@@ -116,32 +139,56 @@ from repro.train.step import init_state, make_group_step
 from repro.utils import dtype_of
 
 
-def _install_sigint(mgr):
-    """First ^C: graceful shutdown — the farm drains at the next barrier,
-    keeps its committed prefixes and published snapshots, and ``run()``
-    returns the partial report. Second ^C: hard KeyboardInterrupt.
-    Returns the previous handler (restore it when the run ends)."""
-    hits = {"n": 0}
-    prev = signal.getsignal(signal.SIGINT)
+class _SignalDrain:
+    """Graceful-stop signal plumbing for a farm run. First SIGINT *or*
+    SIGTERM: the farm drains at the next barrier, keeps its committed
+    prefixes and published snapshots, ``run()`` returns the partial
+    report, and the process should exit ``exit_code`` (``128 + signum``:
+    130 for ^C, 143 for SIGTERM — SIGTERM is what supervisors, container
+    runtimes, and CI timeouts send, and it must get the same clean drain
+    a ^C does). A second SIGINT raises KeyboardInterrupt; a second
+    SIGTERM restores the default disposition and re-delivers it — an
+    immediate hard kill either way."""
 
-    def handler(signum, frame):
-        hits["n"] += 1
-        if hits["n"] == 1:
-            print("SIGINT: draining farm at the next barrier "
-                  "(^C again to kill)", file=sys.stderr)
-            mgr.request_shutdown()
+    def __init__(self, mgr):
+        self.mgr = mgr
+        self.exit_code = 130
+        self._hits = 0
+        self._prev = {}
+
+    def install(self) -> "_SignalDrain":
+        for s in (signal.SIGINT, signal.SIGTERM):
+            self._prev[s] = signal.signal(s, self._handle)
+        return self
+
+    def restore(self):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        self._prev = {}
+
+    def _handle(self, signum, frame):
+        self._hits += 1
+        if self._hits == 1:
+            self.exit_code = 128 + int(signum)
+            print(f"{signal.Signals(signum).name}: draining farm at the "
+                  f"next barrier (signal again to kill)", file=sys.stderr)
+            self.mgr.request_shutdown()
+        elif signum == signal.SIGTERM:
+            signal.signal(signal.SIGTERM, signal.SIG_DFL)
+            os.kill(os.getpid(), signal.SIGTERM)
         else:
-            signal.signal(signal.SIGINT, prev)
+            signal.signal(signal.SIGINT,
+                          self._prev.get(signal.SIGINT, signal.SIG_DFL))
             raise KeyboardInterrupt
 
-    signal.signal(signal.SIGINT, handler)
-    return prev
 
-
-def submit_train_job(mgr, cfg, steps, interval, batch=2, seq=16, seed=0,
-                     capture=None):
-    """Fused train engine as a farm job: P-Shell drain + stack_batches per
-    window (donate=False so requeue can replay from the initial state)."""
+def _train_board_parts(cfg, steps, interval, batch=2, seq=16, seed=0):
+    """Fused train engine's job parts: P-Shell drain + stack_batches per
+    window (donate=False so requeue can replay from the initial state).
+    Shared by the CLI submit path and the ``zp.train_board`` registered
+    factory — everything here is rebuilt from plain kwargs, which is what
+    lets crash recovery re-instantiate the board from its journaled
+    JobSpec instead of a dead process's closures."""
     model = build_model(cfg, Runtime(taps=frozenset({"commits"})))
     ingest = make_ingest(cfg)
     shell = PShell(default_shell_config(cfg, sample_interval=interval),
@@ -152,21 +199,45 @@ def submit_train_job(mgr, cfg, steps, interval, batch=2, seq=16, seed=0,
     windows = [[next(pipe) for _ in range(p.size)]
                for p in plan_windows(steps, interval)]
     pipe.close()
+    state = init_state(model, jax.random.key(seed))
+    return dict(engine=engine, windows=windows, state=state,
+                shell=shell.init(), drain_fn=drain,
+                stack_fn=stack_batches)
+
+
+@register("zp.train_board")
+def _train_board_factory(arch="granite-8b", steps=8, interval=2, batch=2,
+                         seq=16, seed=0):
+    return _train_board_parts(get_smoke_config(arch), steps, interval,
+                              batch=batch, seq=seq, seed=seed)
+
+
+def train_board_spec(arch: str, steps: int, interval: int,
+                     **kw) -> JobSpec:
+    """Serializable JobSpec for the fused TRAIN board (the durable-intake
+    analog of :func:`submit_train_job`, minus the loss sink — a recovered
+    board delivers through the ledger's exactly-once cursor instead)."""
+    return JobSpec(name="train", factory="zp.train_board",
+                   kwargs={"arch": arch, "steps": int(steps),
+                           "interval": int(interval), **kw})
+
+
+def submit_train_job(mgr, cfg, steps, interval, batch=2, seq=16, seed=0,
+                     capture=None):
+    """Fused train engine as a farm job (see ``_train_board_parts``)."""
+    parts = _train_board_parts(cfg, steps, interval, batch=batch, seq=seq,
+                               seed=seed)
     losses: list = []
 
     def sink(plan, records, metrics):
         losses.extend(np.asarray(metrics["loss"], np.float32).tolist())
 
-    state = init_state(model, jax.random.key(seed))
     if capture is not None:
         # the board's own first compile is the HLO cost source — no
         # dry-run second lowering (attach_cost is the offline path)
-        engine = capture.attach_engine(engine)
-    mgr.submit(FarmJob(
-        name="train", engine=engine, windows=windows,
-        state=state, shell=shell.init(),
-        drain_fn=drain, stack_fn=stack_batches, on_drain=sink,
-        capture=capture))
+        parts["engine"] = capture.attach_engine(parts["engine"])
+    mgr.submit(FarmJob(name="train", on_drain=sink, capture=capture,
+                       **parts))
     return losses
 
 
@@ -637,11 +708,271 @@ def run_scope_smoke(mode: str = "async", lanes: int = 1,
     }
 
 
+# ------------------------------------------------------------ ZP-Ledger --
+
+def _toy_stack(items):
+    return jnp.asarray(np.stack(items))
+
+
+def _noop_barrier(state, boundary):
+    pass
+
+
+def _write_window_file(out_dir: str, board: str, index: int, ys) -> str:
+    """Atomic, idempotent per-window delivery: tmp + fsync + rename keyed
+    on the GLOBAL window index. This is the documented sink contract for
+    the WAL's one honest edge — a window whose ``deliver`` record was
+    torn by a crash is re-delivered once after recovery, and rewriting
+    the same window file with the same bytes is a no-op."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{board}_w{index:05d}.json")
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump({"window": int(index), "y": np.asarray(ys).tolist()},
+                  f, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+@register("zp.ledger_board")
+def _ledger_board_factory(board="board", scale=1.0, n_windows=24,
+                          out_dir=".", delay=0.005):
+    """Registered toy board for the durable-farm gates: window *w* yields
+    ``[w * scale]`` (analytic — divergence after recovery is detectable
+    bit-exactly), a checkpoint barrier at every window boundary, and an
+    idempotent per-window file sink. The per-window ``delay`` paces
+    commits so the control plane's incremental delivery cursor tracks
+    them — at a mid-stream SIGKILL the journal then holds BOTH a commit
+    frontier and a delivered cursor behind it, the state recovery must
+    reconcile."""
+    scale = float(scale)
+
+    @jax.jit
+    def _body(state, stack):
+        return state + jnp.sum(stack), stack * scale
+
+    def engine(state, shell, stack):
+        if delay:
+            time.sleep(delay)
+        s, ys = _body(state, stack)
+        return s, shell, ys
+
+    def sink(plan, records, ys):
+        _write_window_file(out_dir, board, plan.index, ys)
+
+    return dict(
+        engine=engine,
+        windows=[[np.float32(w)] for w in range(int(n_windows))],
+        state=jnp.float32(0), shell={},
+        stack_fn=_toy_stack, on_drain=sink,
+        barriers=(DrainBarrier(every=1, action=_noop_barrier),))
+
+
+def ledger_board_spec(name: str, scale: float, n_windows: int,
+                     ledger_dir: str) -> JobSpec:
+    """One durable toy board: outputs, snapshots, and journal all live
+    under ``ledger_dir`` so a recovering process finds everything by the
+    journal alone. ``snapshot_keep=4`` leaves enough on-disk history for
+    ``choose_resume`` to rewind past a torn newest snapshot."""
+    return JobSpec(
+        name=name, factory="zp.ledger_board",
+        kwargs={"board": name, "scale": float(scale),
+                "n_windows": int(n_windows),
+                "out_dir": os.path.join(ledger_dir, "outputs")},
+        snapshot_dir=os.path.join(ledger_dir, "snaps", name),
+        snapshot_keep=4, max_requeues=4)
+
+
+def run_ledger_farm(ledger_dir: str, mode: str = "async",
+                    recover: bool = False, kill_after=None,
+                    n_boards: int = 3, n_windows: int = 24,
+                    slots: int = 2) -> dict:
+    """One durable-farm process lifetime: fresh (``recover=False``)
+    submits ``n_boards`` toy boards through the journaled JobSpec intake;
+    ``recover=True`` rebuilds the whole farm from ``ledger_dir``'s
+    journal and finishes the campaign. ``kill_after=N`` arms a
+    ``process_kill`` injection at the N-th journaled commit — the caller
+    sees this process die by SIGKILL, mid-write-order, exactly like an
+    OOM kill."""
+    ledger = FarmLedger(ledger_dir)
+    if recover:
+        mgr = FarmManager.recover(ledger, slots=slots, mode=mode,
+                                  evict_stragglers=False, poll_s=0.01)
+    else:
+        mgr = FarmManager(slots=slots, mode=mode, evict_stragglers=False,
+                          poll_s=0.01, ledger=ledger)
+        for i in range(n_boards):
+            mgr.submit_spec(ledger_board_spec(
+                f"board{i}", float(i + 1), n_windows, ledger_dir))
+    if kill_after is not None:
+        injector = ChaosInjector(telemetry=mgr.telemetry)
+        # scope "farm" counts every journaled commit across all boards:
+        # die at the Nth, whoever commits it
+        injector.arm([Injection(kind="process_kill", point="ledger.commit",
+                                scope="farm", name="*",
+                                at=max(0, int(kill_after) - 1))])
+        mgr.injector = injector
+    report = mgr.run(strict=False)
+    jobs = report["jobs"]       # empty-journal recover: a minimal report
+    out = {
+        "mode": mode,
+        "recover": recover,
+        "jobs": jobs,
+        "recoveries": report["telemetry"].get("recoveries", []),
+        "interrupted": report.get("interrupted", False),
+        "windows_committed": sum(j["windows_committed"]
+                                 for j in jobs.values()),
+        "windows_replayed": sum(j["windows_replayed"]
+                                for j in jobs.values()),
+        "windows_delivered": sum(j["windows_delivered"]
+                                 for j in jobs.values()),
+        "ok": (not report.get("interrupted", False)
+               and all(j["status"] == "done" for j in jobs.values())),
+    }
+    if not report.get("interrupted", False):
+        # bound journal growth once the campaign settled — NOT inside
+        # FarmManager.run(), which must leave the full audit trail for
+        # a supervisor (and the kill-restart gate) to inspect
+        ledger.compact()
+    ledger.close()
+    return out
+
+
+def _read_window_files(out_dir: str) -> dict:
+    files = {}
+    if os.path.isdir(out_dir):
+        for fn in sorted(os.listdir(out_dir)):
+            if fn.endswith(".json"):
+                with open(os.path.join(out_dir, fn), "rb") as f:
+                    files[fn] = f.read()
+    return files
+
+
+def run_killrestart_smoke(mode: str = "async", n_boards: int = 3,
+                          n_windows: int = 24, kill_after: int = 8,
+                          slots: int = 2) -> dict:
+    """The ``farm-killrestart-smoke`` gate: whole-process crash recovery.
+    Three subprocess-visible phases: (1) a fault-free oracle run
+    in-process; (2) a victim subprocess armed with ``process_kill`` at
+    the ``kill_after``-th journaled commit — it must die by SIGKILL with
+    delivery already in flight; (3) a ``--recover`` subprocess over the
+    victim's ledger that must finish the campaign. ``ok`` requires the
+    recovery resumed at least one board mid-stream (window > 0), replayed
+    fewer windows than the campaign committed, delivered every window
+    exactly once across both lifetimes (per-board cursors reach exactly
+    ``n_windows``), and produced per-window output files bit-identical to
+    the oracle's."""
+    import shutil
+    import subprocess
+    import tempfile
+
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    base = tempfile.mkdtemp(prefix="zp-killrestart-")
+    problems: list = []
+    out: dict = {"mode": mode, "kill_after": kill_after}
+    try:
+        oracle_dir = os.path.join(base, "oracle")
+        oracle = run_ledger_farm(oracle_dir, mode=mode, n_boards=n_boards,
+                                 n_windows=n_windows, slots=slots)
+        if not oracle["ok"]:
+            problems.append("fault-free oracle run failed")
+
+        victim_dir = os.path.join(base, "victim")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + os.pathsep \
+            + env.get("PYTHONPATH", "")
+        common = [sys.executable, "-m", "repro.launch.farm",
+                  "--ledger", victim_dir, f"--{mode}",
+                  "--slots", str(slots),
+                  "--ledger-boards", str(n_boards),
+                  "--ledger-windows", str(n_windows)]
+        victim = subprocess.run(
+            common + ["--kill-after-commits", str(kill_after)],
+            env=env, capture_output=True, text=True, timeout=600)
+        if victim.returncode != -signal.SIGKILL:
+            problems.append(f"victim exited {victim.returncode}, expected "
+                            f"{-signal.SIGKILL} (SIGKILL'd mid-commit)")
+
+        # the victim's journal as the recovery will see it: the delivered
+        # cursors must already be moving, or the exactly-once suppression
+        # across lifetimes would be exercised vacuously
+        led = FarmLedger(victim_dir)
+        pre = led.replay()
+        led.close()
+        pre_delivered = {n: js.delivered for n, js in pre.jobs.items()}
+        out["pre_delivered"] = pre_delivered
+        if sum(pre_delivered.values()) <= 0:
+            problems.append("victim died before delivering any window — "
+                            "the kill landed too early to gate recovery")
+
+        rec = subprocess.run(common + ["--recover"], env=env,
+                             capture_output=True, text=True, timeout=600)
+        if rec.returncode != 0:
+            problems.append(f"recovery run exited {rec.returncode}: "
+                            f"{rec.stderr[-500:]}")
+        try:
+            recovered = json.loads(rec.stdout)
+        except ValueError:
+            recovered = {}
+            problems.append("recovery run printed no parseable report")
+        out["recovered"] = recovered
+
+        if recovered:
+            if not recovered.get("ok"):
+                problems.append("recovered run did not finish every "
+                                "board done")
+            if not any(r["window"] > 0
+                       for r in recovered.get("recoveries", [])):
+                problems.append("no board resumed mid-stream "
+                                "(every recovery fell back to window 0)")
+            replayed = recovered.get("windows_replayed", -1)
+            committed = recovered.get("windows_committed", 0)
+            if not 0 <= replayed < committed:
+                problems.append(
+                    f"windows_replayed={replayed} not below "
+                    f"windows_committed={committed} — recovery replayed "
+                    f"the full stream")
+
+        # exactly-once across both lifetimes: the final journal's deliver
+        # cursor per board is exactly the stream length — never short
+        # (lost windows) and never past it (double delivery)
+        led = FarmLedger(victim_dir)
+        final = led.replay()
+        led.close()
+        for i in range(n_boards):
+            js = final.jobs.get(f"board{i}")
+            if js is None or js.status != "done":
+                problems.append(f"board{i}: not done in the final journal")
+            elif js.delivered != n_windows:
+                problems.append(
+                    f"board{i}: delivered cursor {js.delivered} != "
+                    f"{n_windows} windows across both lifetimes")
+
+        want = _read_window_files(os.path.join(oracle_dir, "outputs"))
+        got = _read_window_files(os.path.join(victim_dir, "outputs"))
+        if len(want) != n_boards * n_windows:
+            problems.append(f"oracle produced {len(want)} window files, "
+                            f"expected {n_boards * n_windows}")
+        if got != want:
+            missing = sorted(set(want) - set(got))
+            diff = sorted(k for k in set(want) & set(got)
+                          if want[k] != got[k])
+            problems.append(f"outputs diverged from the oracle: "
+                            f"missing={missing[:5]} differing={diff[:5]}")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+    out["problems"] = problems
+    out["ok"] = not problems
+    return out
+
+
 def write_telemetry(path: str, out: dict, run_key: str) -> str:
     """Dump a farm run's merged telemetry + scope report as JSON, keyed
     by run so repeated invocations MERGE into one file (the
     BENCH_results.json convention — one mergeable record per run)."""
-    import os
     data = {}
     if os.path.exists(path):
         try:
@@ -724,18 +1055,19 @@ def run_farm(arch: str, steps: int, slots, interval: int = 2,
             mgr.force_evict(straggler.name)
 
     prewarm_s = prewarm(mgr)
-    prev = _install_sigint(mgr) if handle_sigint else None
+    drainer = _SignalDrain(mgr).install() if handle_sigint else None
     try:
         report = mgr.run(strict=False)
     finally:
-        if prev is not None:
-            signal.signal(signal.SIGINT, prev)
+        if drainer is not None:
+            drainer.restore()
     if report["interrupted"]:
         # graceful stop: partial report + telemetry, no pass/fail gating —
         # committed prefixes and published snapshots were kept
         return {
             "mode": mode,
             "interrupted": True,
+            "exit_code": drainer.exit_code if drainer else 130,
             "prewarm_s": round(prewarm_s, 3),
             "jobs": report["jobs"],
             "telemetry": report["telemetry"],
@@ -816,6 +1148,29 @@ def main():
                     help="dump the run's merged telemetry + scope report "
                          "as JSON at PATH (repeated runs merge by key, "
                          "like BENCH_results.json)")
+    ap.add_argument("--ledger", metavar="DIR", default=None,
+                    help="attach a ZP-Ledger write-ahead journal at DIR "
+                         "and run the durable toy workload (outputs, "
+                         "snapshots, and journal all under DIR)")
+    ap.add_argument("--recover", action="store_true",
+                    help="with --ledger: rebuild the farm from DIR's "
+                         "journal after a process death and finish the "
+                         "campaign")
+    ap.add_argument("--kill-after-commits", type=int, metavar="N",
+                    default=None,
+                    help="with --ledger: SIGKILL this process at the "
+                         "N-th journaled commit (chaos process_kill — "
+                         "models an OOM kill mid-write-order)")
+    ap.add_argument("--ledger-boards", type=int, default=3,
+                    help="with --ledger: number of toy boards")
+    ap.add_argument("--ledger-windows", type=int, default=24,
+                    help="with --ledger: windows per toy board")
+    ap.add_argument("--killrestart-smoke", action="store_true",
+                    help="whole-process crash-recovery gate: oracle run, "
+                         "SIGKILL'd victim subprocess, --recover "
+                         "subprocess; exit non-zero unless recovery "
+                         "resumed mid-stream with bit-identical outputs "
+                         "and exactly-once delivery across lifetimes")
     ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
                     help="fault-recovery gate: inject a seeded fault "
                          "schedule; exit non-zero unless every fault was "
@@ -830,6 +1185,25 @@ def main():
                    help="single-thread round-robin host loop (the "
                         "bit-identity oracle)")
     args = ap.parse_args()
+
+    if args.killrestart_smoke:
+        out = run_killrestart_smoke(mode=args.mode)
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
+
+    if args.ledger:
+        out = run_ledger_farm(args.ledger, mode=args.mode,
+                              recover=args.recover,
+                              kill_after=args.kill_after_commits,
+                              n_boards=args.ledger_boards,
+                              n_windows=args.ledger_windows,
+                              slots=args.slots)
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
 
     if args.scope_smoke:
         out = run_scope_smoke(mode=args.mode, lanes=args.lanes or 1,
@@ -888,7 +1262,7 @@ def main():
     if out.get("interrupted"):
         print(json.dumps(out, indent=1, default=float))
         print(out["summary"], file=sys.stderr)
-        sys.exit(130)
+        sys.exit(out.get("exit_code", 130))
     print(json.dumps(out, indent=1, default=float))
     if not out["ok"]:
         sys.exit(1)
