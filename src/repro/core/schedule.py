@@ -58,6 +58,7 @@ from contextlib import contextmanager
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.annotations import thread_confined
 from repro.core.pshell import _reset_jitted
 from repro.core.pshell import drain as shell_drain
 from repro.core.pshell import stack_batches
@@ -502,6 +503,7 @@ class WindowScheduler:
             on_drain(client, plan, records, ys)
 
 
+@thread_confined
 class ClientDriver:
     """Thread-confined window pipeline for ONE client (one board's host
     driver).

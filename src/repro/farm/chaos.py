@@ -125,8 +125,10 @@ class ChaosInjector:
         self._lock = threading.Lock()
 
     def arm(self, schedule):
-        for inj in schedule:
-            self._pending[(inj.point, inj.scope, inj.name, inj.at)] = inj
+        with self._lock:    # arming can race already-running fires
+            for inj in schedule:
+                self._pending[(inj.point, inj.scope, inj.name,
+                               inj.at)] = inj
 
     @property
     def pending(self) -> List[Injection]:

@@ -36,6 +36,8 @@ Record kinds (unknown kinds are ignored on replay — forward compat)::
                                       rebased onto the recovering
                                       process's own clock
     quarantine  {job, why}            dead-lettered
+    certify_fail {job, why, rules}    ZP-Cert rejected the board at
+                                      submit — dead-lettered unrun
     failed      {job, why}
     done        {job, windows}        full stream delivered
     interrupted {job}                 graceful stop; resumable
@@ -62,6 +64,8 @@ import os
 import threading
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.analysis.annotations import exclusive, locked
 
 
 def _jsonable(x):
@@ -139,6 +143,7 @@ class FarmLedger:
         self._open()
 
     # ------------------------------------------------------------- open --
+    @exclusive
     def _open(self):
         """Scan the journal, keep the longest valid prefix, truncate the
         torn tail in place (the crash artifact this format exists for),
@@ -240,6 +245,9 @@ class FarmLedger:
             elif kind == "quarantine":
                 j.status = "quarantined"
                 j.error = rec.get("why")
+            elif kind == "certify_fail":
+                j.status = "quarantined"
+                j.error = rec.get("why")
             elif kind == "failed":
                 j.status = "failed"
                 j.error = rec.get("why")
@@ -303,6 +311,7 @@ class FarmLedger:
             self._seq = 0
             self._open_records_from_disk()
 
+    @locked("_lock")
     def _open_records_from_disk(self):
         """Re-scan after compaction (caller holds the lock)."""
         with open(self.path, "rb") as f:

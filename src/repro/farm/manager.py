@@ -115,6 +115,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.annotations import (any_thread, control_thread_only,
+                                        locked)
 from repro.checkpoint.manager import (MemorySnapshotStore,
                                       SnapshotIntegrityError)
 from repro.core import scope as zp_scope
@@ -574,6 +576,7 @@ class FarmManager(ClientPolicy):
                  policy: Optional[FailurePolicy] = None,
                  lanes: int = 1,
                  ledger: Any = None,
+                 certify: bool = False,
                  clock: Callable[[], float] = time.perf_counter):
         if mode not in ("lockstep", "async"):
             raise ValueError(f"unknown farm mode: {mode!r}")
@@ -592,6 +595,7 @@ class FarmManager(ClientPolicy):
         self.poll_s = poll_s
         self.policy = policy
         self.ledger = ledger        # FarmLedger: durable journal (ZP-Ledger)
+        self.certify = certify      # ZP-Cert admission gate (repro.analysis)
         self.clock = clock
         self.injector = None        # chaos harness hook (repro.farm.chaos)
 
@@ -604,7 +608,9 @@ class FarmManager(ClientPolicy):
         self._free: List[DeviceSlot] = []
         self._avoid: Dict[str, str] = {}        # job -> slot to avoid
         self._evicted: set = set()              # client idxs, confirmed out
-        self._force: set = set()                # job names, test/CLI hook
+        self._mu = threading.Lock()             # guards _force (any thread
+        self._force: set = set()                # may force_evict; the
+        # control plane reads and clears marks at drain/finish boundaries)
         self._pre: Dict[int, float] = {}        # client idx -> t(place_fn)
         self._next_idx = 0
         # ----- async control plane state -----
@@ -620,7 +626,10 @@ class FarmManager(ClientPolicy):
         self._shutdown = threading.Event()
 
     # ------------------------------------------------------------- intake --
+    @control_thread_only
     def submit(self, job: FarmJob) -> FarmJob:
+        if self.certify and not self._certify_submit(job):
+            return job          # dead-lettered at admission, never queued
         self.jobs.append(job)
         self.queue.append(job)
         spec = None
@@ -632,6 +641,38 @@ class FarmManager(ClientPolicy):
                 # on recovery with a reason instead of raising here)
         self._journal("submit", job=job.name, spec=spec)
         return job
+
+    @control_thread_only
+    def _certify_submit(self, job: FarmJob) -> bool:
+        """ZP-Cert admission gate: statically certify the board (trace
+        only, no device dispatch) before it can ever reach a slot. A
+        board with error-severity findings is dead-lettered with a
+        durable ``certify_fail`` record — co-submitted healthy jobs are
+        unaffected. Warnings go to telemetry and the report but never
+        gate. Returns True if the job may enter the queue."""
+        from repro.analysis.boardcheck import Finding, certify_job
+        try:
+            findings = certify_job(job).findings
+        except Exception as e:  # noqa: BLE001 — a certifier crash must
+            # not take down the farm's intake; treat it as uncertifiable
+            findings = [Finding(rule="ZC100", severity="error",
+                                summary="certification crashed",
+                                detail=repr(e))]
+        errors = [f for f in findings if f.severity == "error"]
+        warnings = [f for f in findings if f.severity == "warning"]
+        if warnings:
+            self.telemetry.certify(job.name, warnings, ok=not errors)
+        if not errors:
+            return True
+        why = "; ".join(f"{f.rule}: {f.summary}" for f in errors)
+        job.status = "quarantined"
+        job.error = f"certification failed: {why}"
+        self.jobs.append(job)
+        self.telemetry.certify(job.name, errors, ok=False)
+        self.telemetry.quarantine(job.name, job.error)
+        self._journal("certify_fail", job=job.name, why=why,
+                      rules=sorted({f.rule for f in errors}))
+        return False
 
     def submit_spec(self, spec, registry: Any = None) -> FarmJob:
         """Build and submit a serializable :class:`~repro.farm.registry.
@@ -750,6 +791,7 @@ class FarmManager(ClientPolicy):
                 "cursor": {"step": np.int64(0), "window": np.int64(0)}}
         return jax.tree.map(lambda _: 0, tree)
 
+    @control_thread_only
     def _dead_letter(self, name: str, why: str) -> FarmJob:
         """Quarantine an unrecoverable journal entry with its reason (a
         recovery must complete the rest of the campaign, not raise)."""
@@ -761,10 +803,14 @@ class FarmManager(ClientPolicy):
         self._journal("quarantine", job=name, why=str(why))
         return job
 
+    @any_thread
     def force_evict(self, job_name: str):
         """Mark a job for eviction at its next drain boundary (the
-        deterministic test/CLI path — the watchdog path is wall-time)."""
-        self._force.add(job_name)
+        deterministic test/CLI path — the watchdog path is wall-time).
+        Safe from any thread: the mark set is shared with the control
+        plane's sweep, so it is mutated under ``_mu``."""
+        with self._mu:
+            self._force.add(job_name)
 
     def request_shutdown(self):
         """Graceful stop (the SIGINT path): no new admissions, every
@@ -802,6 +848,7 @@ class FarmManager(ClientPolicy):
             return self.policy.max_retries
         return job.max_requeues
 
+    @control_thread_only
     def _slot_result(self, slot_name: str, ok: bool, why: str = ""):
         """Score one finished run on a slot; trip the breaker when the
         failure count inside the scoring window crosses the threshold."""
@@ -823,6 +870,7 @@ class FarmManager(ClientPolicy):
         """Slots placement must skip: lost, benched, or out on a probe."""
         return self._lost | set(self._benched) | self._probing
 
+    @control_thread_only
     def _canary_verdict(self, slot_name: str, ok: bool, err):
         self._probing.discard(slot_name)
         if ok:
@@ -847,6 +895,7 @@ class FarmManager(ClientPolicy):
                                    f"{n} consecutive canary failures")
 
     # ------------------------------------------------------------ running --
+    @control_thread_only
     def run(self, strict: bool = True) -> dict:
         if not self.jobs:
             return {"jobs": {}, "telemetry": self.telemetry.report()}
@@ -909,6 +958,7 @@ class FarmManager(ClientPolicy):
         return self.telemetry.scope_report()
 
     # ================================================== async control plane
+    @control_thread_only
     def _run_async(self):
         self._workers = {s.name: _SlotWorker(self, s, self.slot_queue_depth)
                          for s in self.slots}
@@ -940,6 +990,7 @@ class FarmManager(ClientPolicy):
                 if w.slot.name not in self._lost:
                     w.join(timeout=10.0)
 
+    @control_thread_only
     def _assign_async(self):
         """Admission: feed queued jobs into slot work queues, honoring the
         requeue avoid-slot preference and each job's backoff gate, with
@@ -982,6 +1033,7 @@ class FarmManager(ClientPolicy):
         if assigned:
             self.telemetry.occupancy(len(self._running), len(self.slots))
 
+    @control_thread_only
     def _pick_async_slot(self, avoid: Optional[str]) -> Optional[DeviceSlot]:
         # least-loaded first: with slot_queue_depth >= 2 a fixed slot
         # order would double-book early slots while later ones sit idle
@@ -995,6 +1047,7 @@ class FarmManager(ClientPolicy):
         return pick_slot(candidates, avoid=avoid,
                          sole_candidate=len(live) == 1)
 
+    @control_thread_only
     def _probe_async(self):
         """Dispatch a canary to every benched slot whose cooldown has
         elapsed (one probe in flight per slot)."""
@@ -1014,6 +1067,7 @@ class FarmManager(ClientPolicy):
             self._probing.add(name)
             self.telemetry.breaker(name, "probe")
 
+    @control_thread_only
     def _orphan_queue(self):
         """Mark everything still queued ``interrupted`` (journaled, so a
         recovery re-queues it instead of losing it)."""
@@ -1023,6 +1077,7 @@ class FarmManager(ClientPolicy):
                 job.status = "interrupted"
                 self._journal("interrupted", job=job.name)
 
+    @control_thread_only
     def _shutdown_async(self):
         """Graceful-stop sweep: orphan the queue, cut every running job at
         its next drain boundary (its committed prefix stays delivered)."""
@@ -1032,10 +1087,13 @@ class FarmManager(ClientPolicy):
                 run.evict_why = "shutdown"
                 run.evict_flag.set()
 
+    @control_thread_only
     def _dispatch_to_slot(self, job: FarmJob, slot: DeviceSlot):
         members = self._gather_lanes(job, slot)
         run = self._new_run(members, slot, t_assigned=self.clock())
-        if {m.name for m in members} & self._force and not (
+        with self._mu:
+            forced = bool({m.name for m in members} & self._force)
+        if forced and not (
                 run.lanes is None
                 and run.job.requeues >= self._budget(run.job)):
             # signal a pre-existing force mark at assignment, not at the
@@ -1052,6 +1110,7 @@ class FarmManager(ClientPolicy):
         self._workers[slot.name].inbox.put(run)
 
     # ---------------------------------------------------- lane coalescing --
+    @control_thread_only
     def _gather_lanes(self, job: FarmJob, slot: DeviceSlot) -> List[FarmJob]:
         """Pull up to ``slot.lane_capacity - 1`` queued jobs compatible
         with ``job`` (same ``lane_key``, engine, plumbing, window shape —
@@ -1075,6 +1134,7 @@ class FarmManager(ClientPolicy):
         self.queue.extendleft(reversed(skipped))
         return members
 
+    @control_thread_only
     def _new_run(self, members: List[FarmJob], slot: DeviceSlot,
                  t_assigned: float = 0.0) -> _Run:
         if len(members) > 1:
@@ -1092,6 +1152,7 @@ class FarmManager(ClientPolicy):
         self._running[run.idx] = run
         return run
 
+    @control_thread_only
     def _make_lane_run(self, members: List[FarmJob], slot: DeviceSlot,
                        t_assigned: float) -> _Run:
         """Fuse N compatible queued jobs into ONE lane-batched run: a
@@ -1150,6 +1211,7 @@ class FarmManager(ClientPolicy):
         return tuple(DrainBarrier(every=b.every, action=fan(j))
                      for j, b in enumerate(proto))
 
+    @control_thread_only
     def _handle_async(self, msg):
         if msg[0] == "canary":
             _, slot_name, ok, err = msg
@@ -1208,6 +1270,7 @@ class FarmManager(ClientPolicy):
             return "work"
         return "auto"
 
+    @control_thread_only
     def _sweep_async(self):
         """Control-plane sweep: watchdog stragglers (measured window wall)
         + forced marks are SIGNALLED to the slot thread (honored at its
@@ -1225,11 +1288,13 @@ class FarmManager(ClientPolicy):
             for idx, run in self._running.items():
                 if run.slot.name in slow:
                     marks.setdefault(idx, "straggler")
+        with self._mu:
+            force = set(self._force)
         for idx, run in self._running.items():
             names = {run.job.name}
             if run.lanes is not None:   # force-marking a member cuts the
                 names.update(m.name for m in run.lanes)  # whole fused run
-            if names & self._force:
+            if names & force:
                 marks.setdefault(idx, "forced")
         for idx, why in marks.items():
             run = self._running[idx]
@@ -1246,6 +1311,7 @@ class FarmManager(ClientPolicy):
                     if r.slot.name in dead]:
             self._abandon_async(run)
 
+    @control_thread_only
     def _abandon_async(self, run: _Run):
         """A slot whose thread stopped beating past the watchdog timeout is
         HUNG mid-dispatch (it cannot even reach an eviction check). The
@@ -1342,6 +1408,7 @@ class FarmManager(ClientPolicy):
         self._journal("commit", job=job.name, slot=run.slot.name,
                       step=int(plan.boundary), window=int(plan.index) + 1)
 
+    @control_thread_only
     def _restore_snapshot(self, job: FarmJob, slot: DeviceSlot,
                           snap: JobSnapshot):
         """Integrity-checked snapshot restore for a requeue. A corrupt or
@@ -1495,6 +1562,7 @@ class FarmManager(ClientPolicy):
             return
         self.wd.observe(run.slot.name, wall, work=work)
 
+    @control_thread_only
     def _on_commit(self, k: int, plan, state, shell):
         """Lockstep snapshot hook (the async path is the slot worker's
         closure): publish unless the attempt is faulted — the veto
@@ -1529,6 +1597,7 @@ class FarmManager(ClientPolicy):
         return tuple(DrainBarrier(every=b.every, action=gate(b.action))
                      for b in run.job.barriers)
 
+    @control_thread_only
     def _finish_run(self, run: _Run, state, shell):
         if run.scope_plane is not None:
             # tail sample (counters since the last read-rate boundary),
@@ -1538,7 +1607,8 @@ class FarmManager(ClientPolicy):
             self._finish_lanes(run, state, shell)
             return
         job = run.job
-        self._force.discard(job.name)   # a stale mark must not outlive us
+        with self._mu:                  # a stale mark must not outlive us
+            self._force.discard(job.name)
         job.status = "done"
         # delivered stream = committed prefix retained across evictions +
         # this (final) attempt's windows from its resume cursor onward —
@@ -1563,6 +1633,7 @@ class FarmManager(ClientPolicy):
                       windows=job._base + len(outputs))
 
     # ------------------------------------------------- ledger delivery --
+    @control_thread_only
     def _deliver_upto(self, job: FarmJob, outputs: List, base: int,
                       upto: int):
         """Ledger-mode exactly-once delivery: hand windows
@@ -1592,6 +1663,7 @@ class FarmManager(ClientPolicy):
         # the documented idempotent-sink edge of the WAL contract
         self._journal("deliver", job=job.name, upto=job.windows_delivered)
 
+    @control_thread_only
     def _deliver_committed(self, run: _Run):
         """Deliver a solo run's committed prefix as commits land (ledger
         mode only — legacy mode keeps delivery at completion). Called at
@@ -1641,6 +1713,7 @@ class FarmManager(ClientPolicy):
             delivered.append((lane, rec, y))
         return delivered, faulted
 
+    @control_thread_only
     def _adopt_lane(self, run: _Run, lane: int) -> int:
         """Adopt lane ``lane``'s committed prefix into its member job
         (the per-lane analog of :meth:`_adopt_progress`, same hung-hand-off
@@ -1656,6 +1729,7 @@ class FarmManager(ClientPolicy):
             m.snapshot = None
         return 0
 
+    @control_thread_only
     def _detach_lane(self, run: _Run, lane: int, why: str):
         """Lane-granular eviction: mask the vetoed lane out of the (still
         running) fused run and requeue its member as a SOLO job resuming
@@ -1677,6 +1751,7 @@ class FarmManager(ClientPolicy):
                       why=str(why))
         self._requeue_member(m, run.slot.name, why)
 
+    @control_thread_only
     def _retire_lanes(self, run: _Run, why: str, interrupted: bool = False):
         """A fused run finished badly (crash, forced eviction, hung slot,
         every lane vetoed, shutdown): detach its vetoed lanes and requeue
@@ -1703,10 +1778,12 @@ class FarmManager(ClientPolicy):
             else:
                 self._requeue_member(m, run.slot.name, why)
 
+    @control_thread_only
     def _requeue_member(self, job: FarmJob, slot_name: str, why: str):
         """The requeue/quarantine/fail tail shared by solo attempts and
         detached lane members (budget, backoff gate, avoid preference)."""
-        self._force.discard(job.name)
+        with self._mu:
+            self._force.discard(job.name)
         if job.requeues < self._budget(job):
             job.requeues += 1
             backoff = (self.policy.backoff_for(job.requeues)
@@ -1734,6 +1811,7 @@ class FarmManager(ClientPolicy):
             job.error = why
             self._journal("failed", job=job.name, why=str(why))
 
+    @control_thread_only
     def _finish_lanes(self, run: _Run, state, shell):
         """Fused-run completion: every surviving lane delivers its full
         stream (committed prefix + this run's windows) exactly once and in
@@ -1746,7 +1824,8 @@ class FarmManager(ClientPolicy):
                 self._detach_lane(run, lane,
                                   f"lane veto: {run.lane_faults[lane]}")
                 continue
-            self._force.discard(m.name)
+            with self._mu:
+                self._force.discard(m.name)
             m.status = "done"
             outputs = m.committed_outputs + run.lane_outputs[lane]
             m.windows_drained = len(outputs)
@@ -1766,6 +1845,7 @@ class FarmManager(ClientPolicy):
                           windows=m._base + len(outputs))
 
     # ----------------------------------------------- ClientPolicy protocol --
+    @control_thread_only
     def admit(self, round_idx: int):
         if self._shutdown.is_set():
             self._interrupt_lockstep()
@@ -1828,9 +1908,11 @@ class FarmManager(ClientPolicy):
             self.telemetry.occupancy(len(self._running), len(self.slots))
         return admissions
 
+    @control_thread_only
     def evict(self, k: int) -> bool:
         return k in self._evicted
 
+    @control_thread_only
     def done(self, k: int, state, shell):
         run = self._running.pop(k)
         self._free.append(run.slot)
@@ -1843,6 +1925,7 @@ class FarmManager(ClientPolicy):
         self._slot_result(run.slot.name, ok=True)
         self._finish_run(run, state, shell)
 
+    @control_thread_only
     def crashed(self, k: int, exc: BaseException) -> bool:
         """Lockstep crash absorption (the ClientPolicy hook run_many
         offers a raising driver to): a client crashing mid-drive is a
@@ -1858,10 +1941,12 @@ class FarmManager(ClientPolicy):
         return True
 
     # -------------------------------------------------- scheduler callbacks --
+    @control_thread_only
     def _place(self, k: int, stack):
         self._pre[k] = self.clock()
         return place_stack(stack, self._running[k].slot)
 
+    @control_thread_only
     def _on_dispatch(self, k: int, plan, state):
         run = self._running[k]
         cost = self.clock() - self._pre.pop(k, self.clock())
@@ -1878,6 +1963,7 @@ class FarmManager(ClientPolicy):
         if run.job.capture is not None:
             run.job.capture.on_dispatch(plan, state)
 
+    @control_thread_only
     def _on_drain(self, k: int, plan, records, ys):
         run = self._running[k]
         self.wd.heartbeat(run.slot.name, gap=False)
@@ -1906,6 +1992,7 @@ class FarmManager(ClientPolicy):
     def _key(run: _Run, plan):
         return (run.job.name, run.job.attempts, plan.index)
 
+    @control_thread_only
     def _pick_slot(self, avoid: Optional[str]) -> Optional[DeviceSlot]:
         out = self._unavailable()
         candidates = [s for s in self._free if s.name not in out]
@@ -1916,6 +2003,7 @@ class FarmManager(ClientPolicy):
             self._free.remove(s)
         return s
 
+    @control_thread_only
     def _probe_lockstep(self):
         """Inline breaker probe (lockstep has no slot threads): run the
         canary on the control thread for each benched slot past its
@@ -1938,6 +2026,7 @@ class FarmManager(ClientPolicy):
             else:
                 self._canary_verdict(name, True, None)
 
+    @control_thread_only
     def _interrupt_lockstep(self):
         """Graceful-stop (lockstep): cut every running client at this
         round boundary — run_many's evict check cancels it, its committed
@@ -1949,6 +2038,7 @@ class FarmManager(ClientPolicy):
             self._retire_interrupted(run)
         self._orphan_queue()
 
+    @control_thread_only
     def _drain_interrupted(self):
         """Post-run sweep for a shutdown that landed after the last admit
         tick: everything still queued or running is interrupted."""
@@ -1958,6 +2048,7 @@ class FarmManager(ClientPolicy):
             self._retire_interrupted(run)
         self._orphan_queue()
 
+    @control_thread_only
     def _retire_interrupted(self, run: _Run):
         """A shutdown-cut attempt: adopt its committed progress (snapshot
         + delivered prefix — a restarted farm resumes from there) and mark
@@ -1973,12 +2064,14 @@ class FarmManager(ClientPolicy):
         run.job.status = "interrupted"
         self._journal("interrupted", job=run.job.name)
 
+    @control_thread_only
     def _admit_one(self, job: FarmJob, slot: DeviceSlot) -> Client:
         members = self._gather_lanes(job, slot)
         run = self._new_run(members, slot)
         self.wd.heartbeat(slot.name, gap=False)
         return self._client_for(run, slot)
 
+    @control_thread_only
     def _process_evictions(self):
         """Drain-boundary eviction sweep: watchdog stragglers + forced
         marks + drain-veto faults all take the same evict/requeue path."""
@@ -1990,11 +2083,13 @@ class FarmManager(ClientPolicy):
             for k, run in self._running.items():
                 if run.slot.name in slow:
                     marks.setdefault(k, "straggler")
+        with self._mu:
+            force = set(self._force)
         for k, run in self._running.items():
             names = {run.job.name}
             if run.lanes is not None:   # force-marking a member cuts the
                 names.update(m.name for m in run.lanes)  # whole fused run
-            if names & self._force:
+            if names & force:
                 marks.setdefault(k, "forced")
             if run.fault is not None:
                 marks.setdefault(k, f"drain veto: {run.fault}")
@@ -2012,6 +2107,7 @@ class FarmManager(ClientPolicy):
                                   why=f"veto: {run.fault}")
             self._requeue_or_fail(run, why)
 
+    @control_thread_only
     def _adopt_progress(self, run: _Run) -> int:
         """Adopt a finished-badly attempt's last accepted snapshot as the
         job's resume point and retain the delivered windows up to its
@@ -2029,6 +2125,7 @@ class FarmManager(ClientPolicy):
             job.snapshot = run.snapshot
         return job.snapshot.window if job.snapshot else 0
 
+    @control_thread_only
     def _requeue_or_fail(self, run: _Run, why: str):
         """Shared evict/fault tail (boundary sweep AND the done()-path
         fault on a job's final window): adopt the attempt's committed

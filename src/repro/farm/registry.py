@@ -32,21 +32,42 @@ from typing import Any, Callable, Dict, Optional
 
 
 class FactoryRegistry:
-    """Name -> job-parts factory map. Registration is idempotent by name
-    (latest wins) so test re-imports and module reloads stay cheap."""
+    """Name -> job-parts factory map.
+
+    Duplicate registration under a different function is an ERROR unless
+    ``override=True``: two modules silently fighting over one name would
+    make ``recover()`` rebuild a journaled job with whichever factory
+    imported last — a wrong-board-from-the-journal class of bug.
+    Re-registering the SAME function (same module + qualname) stays
+    idempotent so test re-imports and module reloads stay cheap."""
 
     def __init__(self):
         self._factories: Dict[str, Callable[..., dict]] = {}
 
-    def register(self, name: str, fn: Optional[Callable] = None):
+    def register(self, name: str, fn: Optional[Callable] = None, *,
+                 override: bool = False):
         """``register("name", fn)`` or ``@register("name")``."""
         if fn is None:
             def deco(f):
-                self._factories[str(name)] = f
+                self._put(str(name), f, override)
                 return f
             return deco
-        self._factories[str(name)] = fn
+        self._put(str(name), fn, override)
         return fn
+
+    def _put(self, name: str, fn: Callable, override: bool):
+        old = self._factories.get(name)
+        if (old is not None and not override
+                and (getattr(old, "__module__", None),
+                     getattr(old, "__qualname__", None))
+                != (getattr(fn, "__module__", None),
+                    getattr(fn, "__qualname__", None))):
+            raise ValueError(
+                f"job factory {name!r} is already registered to "
+                f"{getattr(old, '__module__', '?')}."
+                f"{getattr(old, '__qualname__', '?')}; pass override=True "
+                f"to replace it")
+        self._factories[name] = fn
 
     def get(self, name: str) -> Callable[..., dict]:
         try:
@@ -67,9 +88,10 @@ class FactoryRegistry:
 REGISTRY = FactoryRegistry()
 
 
-def register(name: str, fn: Optional[Callable] = None):
+def register(name: str, fn: Optional[Callable] = None, *,
+             override: bool = False):
     """Register a factory in the module-level :data:`REGISTRY`."""
-    return REGISTRY.register(name, fn)
+    return REGISTRY.register(name, fn, override=override)
 
 
 #: FarmJob init fields a factory may return. Everything else (budget,
@@ -90,6 +112,23 @@ class JobSpec:
     snapshot_dir: Optional[str] = None  # non-None: on-disk CheckpointManager
     snapshot_keep: int = 3
     scope: Optional[Dict[str, Any]] = None  # ScopeSpec kwargs
+
+    def __post_init__(self):
+        # Fail at CONSTRUCTION, naming the bad key: a non-JSON kwarg
+        # (device array, closure, module) would otherwise surface as an
+        # opaque to_json failure at submit — or worse, a job journaled
+        # as spec=null that recovery can only dead-letter.
+        if not isinstance(self.kwargs, dict):
+            raise TypeError(f"JobSpec.kwargs must be a dict, "
+                            f"got {type(self.kwargs).__name__}")
+        for k, v in self.kwargs.items():
+            try:
+                json.dumps(v)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    f"JobSpec {self.name!r}: kwargs[{k!r}] is not "
+                    f"JSON-serializable ({type(v).__name__}): {e}"
+                ) from None
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)

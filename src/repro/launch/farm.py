@@ -969,6 +969,95 @@ def run_killrestart_smoke(mode: str = "async", n_boards: int = 3,
     return out
 
 
+def _poison_board(n_windows: int = 4) -> FarmJob:
+    """A board ZP-Cert must reject at admission: the engine smuggles a
+    host round-trip (``pure_callback``) into the window body — the
+    silent per-window host-sync class (rule ZC101)."""
+    def engine(state, shell, stack):
+        host = jax.pure_callback(
+            lambda x: np.asarray(x),
+            jax.ShapeDtypeStruct((), jnp.float32), state)
+        return state + host, shell, stack * 2.0
+
+    return FarmJob(
+        name="poison", engine=engine,
+        windows=[[np.float32(i)] for i in range(n_windows)],
+        state=jnp.float32(0), shell={}, stack_fn=_toy_stack)
+
+
+def run_certify_smoke(work_dir: str | None = None, mode: str = "async",
+                      slots: int = 2, n_boards: int = 2,
+                      n_windows: int = 8) -> dict:
+    """The ``farm-certify-smoke`` gate: a ``certify=True`` farm given
+    ``n_boards`` healthy boards plus one statically-broken board must
+    dead-letter the broken one AT ADMISSION — an unrun quarantine with a
+    durable ``certify_fail`` journal record — while the co-submitted
+    healthy boards finish bit-identical to a ``certify=False`` oracle
+    run of the same boards."""
+    import shutil
+    import tempfile
+    base = work_dir or tempfile.mkdtemp(prefix="zp_certify_")
+    own = work_dir is None
+    problems = []
+    out = {"mode": mode}
+    try:
+        cert_dir = os.path.join(base, "certified")
+        ledger = FarmLedger(cert_dir)
+        mgr = FarmManager(slots=slots, mode=mode, evict_stragglers=False,
+                          poll_s=0.01, ledger=ledger, certify=True)
+        for i in range(n_boards):
+            mgr.submit_spec(ledger_board_spec(
+                f"board{i}", float(i + 1), n_windows, cert_dir))
+        poison = mgr.submit(_poison_board())
+        if poison.status != "quarantined":
+            problems.append("poison board was not quarantined at submit")
+        report = mgr.run(strict=False)
+        fails = [r for r in ledger.records()
+                 if r.get("kind") == "certify_fail"]
+        ledger.close()
+        if not any(r.get("job") == "poison" for r in fails):
+            problems.append("no certify_fail journal record for poison")
+        if not any(not c["ok"] for c in
+                   report["telemetry"].get("certifications", [])):
+            problems.append("no failed-certification telemetry event")
+        healthy = {k: v for k, v in report["jobs"].items()
+                   if k != "poison"}
+        if not all(j["status"] == "done" for j in healthy.values()):
+            problems.append(f"healthy boards did not finish: "
+                            f"{ {k: j['status'] for k, j in healthy.items()} }")
+
+        oracle_dir = os.path.join(base, "oracle")
+        oracle = FarmManager(slots=slots, mode=mode,
+                             evict_stragglers=False, poll_s=0.01)
+        for i in range(n_boards):
+            oracle.submit_spec(ledger_board_spec(
+                f"board{i}", float(i + 1), n_windows, oracle_dir))
+        oracle_report = oracle.run(strict=False)
+        if not all(j["status"] == "done"
+                   for j in oracle_report["jobs"].values()):
+            problems.append("oracle run did not finish")
+        got = _read_window_files(os.path.join(cert_dir, "outputs"))
+        want = _read_window_files(os.path.join(oracle_dir, "outputs"))
+        if len(want) != n_boards * n_windows:
+            problems.append(f"oracle produced {len(want)} window files, "
+                            f"expected {n_boards * n_windows}")
+        if got != want:
+            problems.append("certified run's outputs diverged from the "
+                            "uncertified oracle")
+        out.update(
+            jobs=report["jobs"],
+            certify_fail_records=fails,
+            certifications=report["telemetry"].get("certifications", []),
+            windows_delivered=sum(j["windows_delivered"]
+                                  for j in healthy.values()))
+    finally:
+        if own:
+            shutil.rmtree(base, ignore_errors=True)
+    out["problems"] = problems
+    out["ok"] = not problems
+    return out
+
+
 def write_telemetry(path: str, out: dict, run_key: str) -> str:
     """Dump a farm run's merged telemetry + scope report as JSON, keyed
     by run so repeated invocations MERGE into one file (the
@@ -999,14 +1088,14 @@ def run_farm(arch: str, steps: int, slots, interval: int = 2,
              synthetic_straggler: bool = False, straggler_factor: float = 6.0,
              roofline: bool = False, seed: int = 0,
              mode: str = "async", handle_sigint: bool = False,
-             scope: ScopeSpec = None) -> dict:
+             scope: ScopeSpec = None, certify: bool = False) -> dict:
     cfg = get_smoke_config(arch)
     # min_s floors the straggler RATIO check: the mixed workload's boards
     # legitimately differ in window cost (a decode window costs more than
     # a one-layer verify window), so sub-200ms medians are never flagged
     # however large the ratio — only genuinely slow boards are evictable
     mgr = FarmManager(slots=slots, straggler_factor=straggler_factor,
-                      straggler_min_s=0.2, mode=mode)
+                      straggler_min_s=0.2, mode=mode, certify=certify)
 
     capture = WindowCapture() if roofline else None
     losses = submit_train_job(mgr, cfg, steps, interval, seed=seed,
@@ -1171,6 +1260,16 @@ def main():
                          "subprocess; exit non-zero unless recovery "
                          "resumed mid-stream with bit-identical outputs "
                          "and exactly-once delivery across lifetimes")
+    ap.add_argument("--certify-smoke", action="store_true",
+                    help="ZP-Cert admission gate: a certify=True farm "
+                         "must dead-letter a statically-broken board at "
+                         "submit (durable certify_fail record) while "
+                         "co-submitted healthy boards finish "
+                         "bit-identical to an uncertified oracle")
+    ap.add_argument("--certify", action="store_true",
+                    help="statically certify every submitted board "
+                         "(ZP-Cert boardcheck) before it can reach a "
+                         "slot; error findings dead-letter the job")
     ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
                     help="fault-recovery gate: inject a seeded fault "
                          "schedule; exit non-zero unless every fault was "
@@ -1185,6 +1284,13 @@ def main():
                    help="single-thread round-robin host loop (the "
                         "bit-identity oracle)")
     args = ap.parse_args()
+
+    if args.certify_smoke:
+        out = run_certify_smoke(mode=args.mode, slots=args.slots)
+        print(json.dumps(out, indent=1, default=float))
+        if not out["ok"]:
+            sys.exit(1)
+        return
 
     if args.killrestart_smoke:
         out = run_killrestart_smoke(mode=args.mode)
@@ -1249,7 +1355,8 @@ def main():
                        synthetic_straggler=args.synthetic_straggler,
                        straggler_factor=args.straggler_factor,
                        roofline=args.roofline, mode=args.mode,
-                       handle_sigint=True, scope=scope)
+                       handle_sigint=True, scope=scope,
+                       certify=args.certify)
     except KeyboardInterrupt:
         # ^C before the farm was running (job setup / compile) or a
         # second ^C during the graceful drain: nothing to keep, exit the

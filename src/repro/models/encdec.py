@@ -62,13 +62,14 @@ def encode(params, cfg, frames, rt: Runtime):
     x = frames + params["enc_pos"].astype(frames.dtype)
 
     def body(x, p):
+        dt = x.dtype            # layer-scan carry: dtype must be stable
         h = norm_apply(cfg, p["norm1"], x)
         B, T, _ = h.shape
         pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
         x = x + attn.attention_apply(p["attn"], cfg, h, pos, causal=False,
                                      impl="xla")
         h2 = norm_apply(cfg, p["norm2"], x)
-        return x + mlp_apply(p["mlp"], h2), None
+        return (x + mlp_apply(p["mlp"], h2)).astype(dt), None
 
     body = rt.checkpoint(body)
     x, _ = jax.lax.scan(body, x, params["encoder"])
@@ -93,7 +94,7 @@ def decode_hidden(params, cfg, tokens, enc_out, rt: Runtime):
     def body(carry, p):
         x = carry
         ckv = attn.make_cross_kv(p["cross"], cfg, enc_out)
-        x = _dec_block(p, cfg, x, positions, ckv, rt)
+        x = _dec_block(p, cfg, x, positions, ckv, rt).astype(carry.dtype)
         aux = {"checksum": checksum(x)} if "commits" in rt.taps else {}
         return x, aux
 

@@ -1,0 +1,302 @@
+"""ZP-Cert tests: one fixture engine per boardcheck rule (each must
+trigger exactly its rule), trace-only certification proven under the
+no-dispatch guard, racecheck rule fixtures as module source strings, the
+shipped farm sources linting clean, and the CLI gate in-process."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.boardcheck import (CertReport, certify_engine,
+                                       certify_job, no_dispatch_guard)
+from repro.analysis.racecheck import (check_paths, check_source,
+                                      farm_sources)
+from repro.core.scope import ScopeSpec
+from repro.farm import FarmJob
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------- fixtures --
+_STATE = jnp.zeros((4,), jnp.float32)
+_SHELL = {"acc": jnp.zeros((), jnp.float32)}
+_STACK = jnp.ones((2, 4), jnp.float32)
+
+
+def _clean_engine(state, shell, stack):
+    s = state + jnp.sum(stack, axis=0)
+    return s, {"acc": shell["acc"] + 1.0}, stack * 2.0
+
+
+def _certify(engine, state=_STATE, shell=None, stack=_STACK, **kw):
+    return certify_engine(engine, state,
+                          _SHELL if shell is None else shell, stack, **kw)
+
+
+def _rules(report: CertReport):
+    return sorted({f.rule for f in report.findings})
+
+
+# ------------------------------------------------------ per-rule fixtures --
+def test_clean_engine_certifies_clean():
+    r = _certify(_clean_engine)
+    assert r.findings == [] and r.ok
+
+
+def test_zc100_untraceable_engine():
+    def engine(state, shell, stack):
+        if float(jnp.sum(state)) > 0:   # concretizes a tracer
+            return state, shell, stack
+        return state, shell, stack
+
+    assert _rules(_certify(engine)) == ["ZC100"]
+
+
+def test_zc101_host_callback_in_body():
+    def engine(state, shell, stack):
+        host = jax.pure_callback(
+            lambda x: np.asarray(x),
+            jax.ShapeDtypeStruct(_STATE.shape, _STATE.dtype), state)
+        return state + host, shell, stack * 2.0
+
+    assert _rules(_certify(engine)) == ["ZC101"]
+
+
+def test_zc102_non_state_donation():
+    @jax.jit
+    def inner(state, shell, stack):
+        return _clean_engine(state, shell, stack)
+
+    engine = jax.jit(_clean_engine, donate_argnums=(1,))
+    assert _rules(_certify(engine)) == ["ZC102"]
+    assert _rules(_certify(inner)) == []    # plain jit donates nothing
+
+
+def test_zc103_donating_engine_non_factory_state():
+    engine = jax.jit(_clean_engine, donate_argnums=(0,))
+    assert _rules(_certify(engine)) == ["ZC103"]
+    # a state FACTORY makes donation replay-safe
+    assert _rules(_certify(engine, state_is_factory=True)) == []
+
+
+def test_zc104_carry_dtype_drift():
+    def engine(state, shell, stack):
+        return state.astype(jnp.bfloat16), shell, stack  # dtype drifts
+
+    r = _certify(engine)
+    assert _rules(r) == ["ZC104"]
+    assert "state" in r.findings[0].summary
+
+
+def test_zc104_carry_treedef_change():
+    def engine(state, shell, stack):
+        return state, {"acc": shell["acc"], "extra": state}, stack
+
+    r = _certify(engine)
+    assert _rules(r) == ["ZC104"]
+    assert "shell" in r.findings[0].summary
+
+
+def test_zc104_not_a_triple():
+    def engine(state, shell, stack):
+        return state, stack             # no shell snapshot
+
+    assert _rules(_certify(engine)) == ["ZC104"]
+
+
+def test_zc105_weak_type_drift():
+    def engine(state, shell, stack):
+        # weak python-scalar carry strengthens after one window
+        return state + jnp.float32(1.0), shell, stack
+
+    r = _certify(engine, state=1.0)
+    assert _rules(r) == ["ZC105"]
+    assert all(f.severity == "warning" for f in r.findings)
+
+
+def test_zc106_key_reuse():
+    def engine(state, shell, stack):
+        key = state["key"]
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))    # same key, second stream
+        return {"key": key}, shell, stack + a + b
+
+    r = _certify(engine, state={"key": jax.random.PRNGKey(0)})
+    assert _rules(r) == ["ZC106"]
+    assert all(f.severity == "warning" for f in r.findings)
+
+
+def test_zc106_split_discipline_is_clean():
+    def engine(state, shell, stack):
+        k1, k2 = jax.random.split(state["key"])
+        noise = jax.random.normal(k1, (4,))
+        return {"key": k2}, shell, stack + noise
+
+    r = _certify(engine, state={"key": jax.random.PRNGKey(0)})
+    assert r.findings == []
+
+
+def test_zc106_fold_in_inside_scan_is_clean():
+    def engine(state, shell, stack):
+        def body(carry, i):
+            k = jax.random.fold_in(state["key"], i)
+            return carry + jax.random.normal(k, (4,)), None
+        s, _ = jax.lax.scan(body, state["x"],
+                            jnp.arange(2, dtype=jnp.int32))
+        return {"key": state["key"], "x": s}, shell, stack
+
+    r = _certify(engine, state={"key": jax.random.PRNGKey(0), "x": _STATE})
+    assert r.findings == []
+
+
+def test_zc106_key_as_scan_const_is_reuse():
+    def engine(state, shell, stack):
+        key = state["key"]
+
+        def body(carry, _):
+            return carry + jax.random.normal(key, (4,)), None  # every iter
+        s, _ = jax.lax.scan(body, state["x"],
+                            jnp.arange(2, dtype=jnp.int32))
+        return {"key": key, "x": s}, shell, stack
+
+    r = _certify(engine, state={"key": jax.random.PRNGKey(0), "x": _STATE})
+    assert _rules(r) == ["ZC106"]
+
+
+def test_zc107_fused_scope_over_donation():
+    engine = jax.jit(_clean_engine, donate_argnums=(0,))
+    r = _certify(engine, state_is_factory=True,
+                 scope=ScopeSpec(fuse=True))
+    assert _rules(r) == ["ZC107"]
+    # unfused plane over the same donation is fine
+    r2 = _certify(engine, state_is_factory=True,
+                  scope=ScopeSpec(fuse=False))
+    assert r2.findings == []
+
+
+# -------------------------------------------------------- trace-only --
+def test_certification_is_trace_only():
+    """Every rule fixture above must certify WITHOUT a device compile."""
+    with no_dispatch_guard():
+        assert _certify(_clean_engine).ok
+        assert _rules(_certify(jax.jit(_clean_engine,
+                                       donate_argnums=(0,)))) == ["ZC103"]
+
+
+def test_no_dispatch_guard_trips_on_real_dispatch():
+    with no_dispatch_guard():
+        with pytest.raises(AssertionError, match="trace-only"):
+            jax.jit(lambda x: x * 2)(jnp.float32(3.0))
+
+
+def test_certify_job_duck_typing():
+    job = FarmJob(name="toy", engine=_clean_engine,
+                  windows=[[np.ones((4,), np.float32)] * 2],
+                  state=_STATE, shell=dict(_SHELL),
+                  stack_fn=lambda it: jnp.asarray(np.stack(it)))
+    with no_dispatch_guard():
+        r = certify_job(job)
+    assert r.name == "toy" and r.findings == []
+
+
+# ------------------------------------------------------------ racecheck --
+_RC201_SRC = '''
+import threading
+from repro.analysis.annotations import any_thread
+
+class Mgr:
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._marks = set()
+
+    def sweep(self):
+        with self._mu:
+            self._marks.clear()
+
+    @any_thread
+    def force(self, name):
+        self._marks.add(name)       # the PR 7 force_evict shape
+'''
+
+_RC202_SRC = '''
+from repro.analysis.annotations import control_thread_only
+
+class Mgr:
+    def __init__(self):
+        self.queue = []
+
+    @control_thread_only
+    def admit(self, j):
+        self.queue.append(j)
+
+    def poke(self, j):              # unannotated: any thread may call
+        self.queue.append(j)
+'''
+
+_RC203_SRC = '''
+from repro.analysis.annotations import control_thread_only, slot_thread_only
+
+class Mgr:
+    @control_thread_only
+    def a(self):
+        self.shared = 1
+
+    @slot_thread_only
+    def b(self):
+        self.shared = 2
+'''
+
+
+def test_rc201_unlocked_mutation():
+    fs = check_source(_RC201_SRC, "fixture.py")
+    assert [f.rule for f in fs] == ["RC201"]
+    assert fs[0].attr == "_marks" and fs[0].method == "force"
+
+
+def test_rc202_cross_thread_write():
+    fs = check_source(_RC202_SRC, "fixture.py")
+    assert [f.rule for f in fs] == ["RC202"]
+    assert fs[0].attr == "queue" and fs[0].method == "poke"
+
+
+def test_rc203_mixed_owners():
+    fs = check_source(_RC203_SRC, "fixture.py")
+    assert [f.rule for f in fs] == ["RC203"]
+    assert fs[0].attr == "shared"
+
+
+def test_suppression_comment():
+    src = _RC201_SRC.replace("self._marks.add(name)",
+                             "self._marks.add(name)  # zp-cert: ok")
+    assert check_source(src, "fixture.py") == []
+
+
+def test_thread_confined_class_is_skipped():
+    src = ("from repro.analysis.annotations import thread_confined\n"
+           + _RC201_SRC.replace("class Mgr:",
+                                "@thread_confined\nclass Mgr:"))
+    assert check_source(src, "fixture.py") == []
+
+
+def test_init_is_exempt():
+    fs = check_source('''
+class C:
+    def __init__(self):
+        self.items = []             # pre-concurrency: exempt
+''', "fixture.py")
+    assert fs == []
+
+
+def test_shipped_farm_sources_lint_clean():
+    assert check_paths(farm_sources()) == []
+
+
+# ------------------------------------------------------------------ CLI --
+def test_cli_racecheck_strict_passes():
+    from repro.analysis.__main__ import main
+    assert main(["--no-boards", "--strict"]) == 0
+
+
+def test_cli_boardcheck_factories_strict_passes():
+    from repro.analysis.__main__ import main
+    assert main(["--no-races", "--strict"]) == 0
